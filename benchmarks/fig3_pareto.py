@@ -1,0 +1,56 @@
+"""Paper Fig. 3: throughput trade-offs for SP/DP FMAs — peak energy- and
+area-efficiency operating points across the (V_DD, V_BB) space, anchored to
+silicon.  Paper endpoints: SP FMA 289 GFLOPS/W (low-energy) / 278 GFLOPS/mm^2
+(high-perf); DP FMA 117 GFLOPS/W / 111 GFLOPS/mm^2."""
+import numpy as np
+
+from repro.core.dse import enumerate_structures, sweep, throughput_pareto
+from repro.core.energy_model import calibrate, predict
+from repro.core.fpu_arch import DP_FMA, SP_FMA, TABLE_I
+
+from bench_lib import emit, timed
+
+# paper measurements span ~0.55V (low-energy) to ~1.15V (high-perf)
+VDD_GRID = np.round(np.arange(0.55, 1.16, 0.025), 3)
+VBB_GRID = np.round(np.arange(0.0, 1.21, 0.2), 2)
+
+
+def peak_points(design, params):
+    best_w, best_mm2 = None, None
+    for vdd in VDD_GRID:
+        for vbb in VBB_GRID:
+            p = predict(design, params, vdd=float(vdd), vbb=float(vbb),
+                        anchored=True)
+            if p["freq_ghz"] <= 0:
+                continue
+            if best_w is None or p["gflops_per_w"] > best_w[0]:
+                best_w = (p["gflops_per_w"], p["gflops_per_mm2"], vdd, vbb)
+            if best_mm2 is None or p["gflops_per_mm2"] > best_mm2[1]:
+                best_mm2 = (p["gflops_per_w"], p["gflops_per_mm2"], vdd, vbb)
+    return best_w, best_mm2
+
+
+def run():
+    params = calibrate()
+    for design, name in ((SP_FMA, "sp_fma"), (DP_FMA, "dp_fma")):
+        (bw, bm), us = timed(peak_points, design, params)
+        m = TABLE_I[name]
+        emit(f"fig3.{name}.low_energy_point", us / 2,
+             f"gflops_per_w={bw[0]:.0f};at_gflops_per_mm2={bw[1]:.0f};"
+             f"vdd={bw[2]};paper_max_gflops_per_w={m.max_gflops_per_w}")
+        emit(f"fig3.{name}.high_perf_point", us / 2,
+             f"gflops_per_mm2={bm[1]:.0f};at_gflops_per_w={bm[0]:.0f};"
+             f"vdd={bm[2]};paper_max_gflops_per_mm2={m.max_gflops_per_mm2}")
+
+    # architectural pareto at 1V (the paper's triangle curve, FPGen sim)
+    pts, us = timed(sweep, enumerate_structures("sp", styles=("fma",)),
+                    params, np.array([1.0]), np.array([0.0]))
+    front = throughput_pareto(pts)
+    emit("fig3.sp_arch_pareto_1v", us,
+         f"n_points={len(pts)};n_pareto={len(front)};"
+         f"best_w={max(p.metrics['gflops_per_w'] for p in front):.0f};"
+         f"best_mm2={max(p.metrics['gflops_per_mm2'] for p in front):.0f}")
+
+
+if __name__ == "__main__":
+    run()

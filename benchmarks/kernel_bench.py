@@ -1,0 +1,43 @@
+"""fma_emu kernel micro-bench (CPU host): emulated-precision matmul cost
+per accumulation style vs the native matmul, plus the quantize kernel."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import BF16
+from repro.kernels.ops import emulated_matmul, quantize_tensor
+
+from bench_lib import emit
+
+
+def _time(fn, *args, n=5):
+    fn(*args).block_until_ready()  # compile+warm
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run():
+    rng = np.random.default_rng(0)
+    m = k = n = 512
+    a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+
+    native = _time(jax.jit(lambda a, b: a @ b), a, b)
+    emit("kernel.native_matmul_512", native, "style=native")
+    for style in ("fused", "cascade", "cascade_fwd"):
+        fn = jax.jit(lambda a, b, s=style: emulated_matmul(
+            a, b, fmt=BF16, style=s, impl="ref"))
+        us = _time(fn, a, b)
+        emit(f"kernel.fma_emu_512.{style}", us,
+             f"overhead_vs_native={us / max(native, 1e-9):.1f}x")
+    q = _time(jax.jit(lambda x: quantize_tensor(x, fmt="bf16", impl="ref")), a)
+    emit("kernel.quantize_512", q, "fmt=bf16")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,80 @@
+"""Generate EXPERIMENTS.md §Dry-run / §Roofline tables from results JSONs
+(run after repro.launch.dryrun + repro.launch.hillclimb)."""
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+SKIPS = [
+    ("tinyllama-1.1b", "pure full attention"),
+    ("starcoder2-7b", "pure full attention"),
+    ("chatglm3-6b", "pure full attention"),
+    ("deepseek-67b", "pure full attention"),
+    ("deepseek-moe-16b", "pure full attention"),
+    ("internvl2-1b", "pure full attention"),
+    ("musicgen-large", "pure full attention"),
+]
+
+
+def fmt_row(key, v):
+    mem = (v["memory"].get("temp_size_in_bytes", 0)
+           + v["memory"].get("argument_size_in_bytes", 0)) / 1e9
+    arch, shape = key.split("|")
+    return (f"| {arch} | {shape} | {v['kind']} | {v['t_compute_s']:.3g} "
+            f"| {v['t_memory_s']:.3g} | {v['t_collective_s']:.3g} "
+            f"| {v['bottleneck']} | {v['roofline_fraction']:.3f} "
+            f"| {v['useful_flop_ratio']:.2f} | {mem:.1f} |")
+
+
+def roofline_table(mesh):
+    path = f"results/dryrun_{mesh}.json"
+    rows = json.load(open(path))
+    out = ["| arch | shape | kind | t_comp (s) | t_mem (s) | t_coll (s) "
+           "| bottleneck | roofline frac | MODEL/HLO flops | HBM GB/chip |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for key in sorted(rows):
+        v = rows[key]
+        if v.get("status") == "ok":
+            out.append(fmt_row(key, v))
+        else:
+            out.append(f"| {key.replace('|', ' | ')} | — | — | — | — | "
+                       f"FAILED | — | — | — |")
+    return "\n".join(out)
+
+
+def perf_table():
+    rows = json.load(open("results/perf_iterations.json"))
+    out = ["| cell | iteration | mb | t_comp | t_mem | t_coll | frac "
+           "| frac (fused-kernel mem) | HBM GB | fits 16GB |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "error" in r:
+            continue
+        out.append(
+            f"| {r['arch']} {r['shape']} | {r['label']} "
+            f"| {r['microbatches']} | {r['t_compute']:.1f} "
+            f"| {r['t_memory']:.1f} | {r['t_collective']:.1f} "
+            f"| {r['roofline_fraction']:.3f} "
+            f"| {r['roofline_fraction_fused']:.3f} | {r['hbm_gb']:.1f} "
+            f"| {'yes' if r['fits_16gb'] else 'NO'} |")
+    return "\n".join(out)
+
+
+def stats(mesh):
+    rows = json.load(open(f"results/dryrun_{mesh}.json"))
+    ok = sum(1 for v in rows.values() if v.get("status") == "ok")
+    return ok, len(rows)
+
+
+if __name__ == "__main__":
+    s_ok, s_n = stats("pod16x16")
+    m_ok, m_n = stats("pod2x16x16")
+    print(f"single-pod: {s_ok}/{s_n}  multi-pod: {m_ok}/{m_n}")
+    with open("results/roofline_single.md", "w") as f:
+        f.write(roofline_table("pod16x16"))
+    with open("results/roofline_multi.md", "w") as f:
+        f.write(roofline_table("pod2x16x16"))
+    with open("results/perf_table.md", "w") as f:
+        f.write(perf_table())
+    print("wrote results/roofline_*.md and results/perf_table.md")

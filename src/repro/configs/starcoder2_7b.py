@@ -1,0 +1,8 @@
+"""StarCoder2-7B — GQA, RoPE [arXiv:2402.19173; hf]."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="starcoder2-7b", family="dense",
+    n_layers=32, d_model=4608, n_heads=36, n_kv_heads=4,
+    d_ff=18432, vocab_size=49152, mlp_act="gelu", qkv_bias=True,
+))

@@ -1,0 +1,16 @@
+"""The paper's primary contribution: FPGen as a TPU-framework numerics core.
+
+formats.py          — parameterized binary float formats + RNE quantizer
+softfloat.py        — bit-exact FMA/CMA semantics (fused vs cascade vs fwd)
+fpu_arch.py         — FPGen microarchitecture design space (FPUDesign)
+energy_model.py     — analytical energy/area/delay model calibrated to Table I
+dse.py              — design-space explorer + Pareto frontiers (Fig. 3/4)
+latency_sim.py      — dependency-trace average-latency-penalty simulator (Fig. 2c)
+body_bias.py        — static/adaptive body-bias energy policies (Fig. 4)
+precision_policy.py — workload -> FPU design selection, framework integration
+trace.py            — dependency-trace extraction from jaxprs + SPEC-like mixes
+"""
+from repro.core.formats import (  # noqa: F401
+    FP32, TF32, BF16, FP16, FP8_E4M3, FP8_E5M2, FP64,
+    FloatFormat, get_format, quantize,
+)

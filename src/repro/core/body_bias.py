@@ -1,0 +1,117 @@
+"""Body-bias energy policies (paper Fig. 4 and the 20% / 3x->1.5x claims).
+
+UTBB FDSOI exposes a wide-range body-bias knob: forward bias (FBB) lowers V_t
+(faster, leakier), zero/reverse bias raises V_t (slower, much less leakage).
+The paper's two results:
+
+  1. At 100% activity, using FBB + a lower V_DD at iso-frequency cuts power
+     ~13% and energy ~20% vs the no-BB design point.
+  2. At 10% activity, keeping the 100%-activity (V_DD, V_t) makes leakage
+     dominate: energy/op rises ~3x.  *Adaptively* raising V_t (lowering the
+     FBB) during low-utilization periods brings this back to ~1.5x.
+
+TPU mapping (DESIGN.md §2): utilization here is the fraction of cycles the
+unit is busy — in the framework this is fed from the *roofline-measured* MXU
+utilization of each (arch x shape) workload, so training telemetry can report
+J/step under each policy.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.core.energy_model import TechParams, calibrate, predict
+from repro.core.fpu_arch import FPUDesign
+
+
+def iso_frequency_vdd(design: FPUDesign, params: TechParams,
+                      f_target_ghz: float, vbb: float,
+                      lo: float = 0.4, hi: float = 1.3) -> float:
+    """Bisect V_DD so the design hits f_target at the given body bias."""
+    for _ in range(60):
+        mid = 0.5 * (lo + hi)
+        f = predict(design, params, vdd=mid, vbb=vbb)["freq_ghz"]
+        if f < f_target_ghz:
+            lo = mid
+        else:
+            hi = mid
+    return 0.5 * (lo + hi)
+
+
+def energy_per_op(design: FPUDesign, params: TechParams, *,
+                  vdd: float, vbb_active: float, vbb_idle: float | None,
+                  util: float) -> Dict[str, float]:
+    """pJ/FLOP at a utilization level.
+
+    The unit is busy a fraction ``util`` of wall-clock; dynamic energy accrues
+    per op, leakage accrues over wall-clock.  vbb_idle!=None models adaptive
+    BB: during idle periods V_t is raised (bias removed) — UTBB FDSOI body
+    bias slews fast enough to track phase-level activity (paper §Measurement).
+    """
+    p = predict(design, params, vdd=vdd, vbb=vbb_active)
+    f = p["freq_ghz"]
+    e_dyn = p["e_op_pj"] / 2.0  # per FLOP (2 FLOP per FMAC op)
+    leak_active_mw = p["p_leak_mw"]
+    if vbb_idle is None:
+        leak_idle_mw = leak_active_mw
+    else:
+        leak_idle_mw = predict(design, params, vdd=vdd, vbb=vbb_idle)[
+            "p_leak_mw"]
+    # wall-clock per FLOP = 1 / (2 f util); active fraction util
+    e_leak = (leak_active_mw * util + leak_idle_mw * (1 - util)) / (
+        2.0 * f * util)  # mW / GHz = pJ
+    return dict(e_dyn_pj=e_dyn, e_leak_pj=e_leak, e_total_pj=e_dyn + e_leak,
+                freq_ghz=f)
+
+
+def bb_study(design: FPUDesign, params: TechParams | None = None,
+             util_low: float = 0.10, vdd: float | None = None,
+             vbb_idle: float = 0.45) -> Dict[str, float]:
+    """Reproduce the paper's three body-bias claims for one design.
+
+    The 3x / 1.5x low-utilization numbers are quoted by the paper on the
+    Fig. 4 energy-efficient operating points (low V_DD), so callers pass the
+    energy-optimal vdd rather than the nominal one.  vbb_idle models the
+    *partial* FBB removal achievable at phase-level adaptation granularity.
+    """
+    params = params or calibrate()
+    vdd_bb, vbb = (design.vdd if vdd is None else vdd), 1.2
+    f_nominal = predict(design, params, vdd=vdd_bb, vbb=vbb)["freq_ghz"]
+    # no-BB design must raise V_DD to hit the same frequency
+    vdd_nobb = iso_frequency_vdd(design, params, f_nominal, vbb=0.0)
+
+    e_bb = energy_per_op(design, params, vdd=vdd_bb, vbb_active=vbb,
+                         vbb_idle=None, util=1.0)
+    e_nobb = energy_per_op(design, params, vdd=vdd_nobb, vbb_active=0.0,
+                           vbb_idle=None, util=1.0)
+    # low utilization: static BB keeps (vdd, vbb); adaptive drops FBB to 0
+    e_low_static = energy_per_op(design, params, vdd=vdd_bb, vbb_active=vbb,
+                                 vbb_idle=None, util=util_low)
+    e_low_adapt = energy_per_op(design, params, vdd=vdd_bb, vbb_active=vbb,
+                                vbb_idle=vbb_idle, util=util_low)
+    return dict(
+        vdd_bb=vdd_bb, vdd_nobb=vdd_nobb, freq_ghz=f_nominal,
+        e_full_bb_pj=e_bb["e_total_pj"],
+        e_full_nobb_pj=e_nobb["e_total_pj"],
+        bb_energy_saving=1.0 - e_bb["e_total_pj"] / e_nobb["e_total_pj"],
+        low_util_static_ratio=e_low_static["e_total_pj"] / e_bb["e_total_pj"],
+        low_util_adaptive_ratio=e_low_adapt["e_total_pj"] / e_bb["e_total_pj"],
+    )
+
+
+def energy_vs_utilization(design: FPUDesign, params: TechParams | None = None,
+                          utils: np.ndarray | None = None):
+    """Fig.4-style curves: energy/op vs utilization, static vs adaptive BB."""
+    params = params or calibrate()
+    utils = np.asarray(utils if utils is not None
+                       else np.geomspace(0.01, 1.0, 25))
+    static, adaptive = [], []
+    for u in utils:
+        static.append(energy_per_op(design, params, vdd=design.vdd,
+                                    vbb_active=1.2, vbb_idle=None,
+                                    util=float(u))["e_total_pj"])
+        adaptive.append(energy_per_op(design, params, vdd=design.vdd,
+                                      vbb_active=1.2, vbb_idle=0.0,
+                                      util=float(u))["e_total_pj"])
+    return utils, np.asarray(static), np.asarray(adaptive)

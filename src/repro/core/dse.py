@@ -1,0 +1,150 @@
+"""FPGen design-space exploration and Pareto frontiers (paper Fig. 3 / 4).
+
+Enumerates the microarchitectural space (style x pipeline partition x Booth
+radix x reduction tree) crossed with the electrical space (V_DD, V_BB), and
+extracts Pareto-optimal sets under the two workload objectives the paper
+optimizes for:
+
+  * throughput: (GFLOPS/W, GFLOPS/mm^2)    -> Fig. 3
+  * latency:    (energy/FLOP, average benchmarked delay)  -> Fig. 4
+    where average delay = cycle * (1 + average latency penalty) on the
+    calibrated SPEC-like mixture, matching the paper's metric.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Iterable, List, Sequence
+
+import numpy as np
+
+from repro.core.energy_model import TechParams, calibrate, predict_grid
+from repro.core.fpu_arch import BOOTH_RADICES, TREES, FPUDesign
+from repro.core.latency_sim import (SpecMix, average_latency_penalty,
+                                    calibrated_spec_mix)
+
+
+# ---------------------------------------------------------------------------
+# Enumeration
+# ---------------------------------------------------------------------------
+def enumerate_structures(precision: str,
+                         styles: Sequence[str] = ("fma", "cma"),
+                         ) -> List[FPUDesign]:
+    """All structural design points for one precision."""
+    out: List[FPUDesign] = []
+    for style in styles:
+        for booth, tree in itertools.product(BOOTH_RADICES, TREES):
+            if style == "fma":
+                for stages in range(3, 8):
+                    out.append(FPUDesign(
+                        precision, "fma", stages=stages,
+                        mul_stages=max(stages - 2, 1), add_stages=0,
+                        booth=booth, tree=tree,
+                        name=f"{precision}_fma_s{stages}_b{booth}_{tree}"))
+            else:
+                for mul_s, add_s in itertools.product((2, 3), (1, 2, 3)):
+                    stages = mul_s + add_s + 1
+                    out.append(FPUDesign(
+                        precision, "cma", stages=stages, mul_stages=mul_s,
+                        add_stages=add_s, booth=booth, tree=tree,
+                        name=f"{precision}_cma_m{mul_s}a{add_s}_b{booth}_{tree}"))
+    return out
+
+
+DEFAULT_VDD_GRID = np.round(np.arange(0.50, 1.151, 0.05), 3)
+DEFAULT_VBB_GRID = np.round(np.arange(0.0, 1.21, 0.3), 2)
+
+
+@dataclasses.dataclass
+class DsePoint:
+    design: FPUDesign
+    vdd: float
+    vbb: float
+    metrics: dict
+
+    @property
+    def key(self) -> str:
+        return f"{self.design.name}@{self.vdd:.2f}V/bb{self.vbb:.1f}"
+
+
+def sweep(designs: Iterable[FPUDesign],
+          params: TechParams | None = None,
+          vdd_grid: np.ndarray = DEFAULT_VDD_GRID,
+          vbb_grid: np.ndarray = DEFAULT_VBB_GRID,
+          util: float = 1.0,
+          mix: SpecMix | None = None,
+          with_latency: bool = False) -> List[DsePoint]:
+    """Evaluate every (structure x voltage) point."""
+    params = params or calibrate()
+    pts: List[DsePoint] = []
+    penalty_cache = {}
+    for d in designs:
+        if with_latency:
+            mix = mix or calibrated_spec_mix()
+            pkey = (d.accum_latency_cycles, d.mul_dep_latency_cycles)
+            if pkey not in penalty_cache:
+                penalty_cache[pkey] = average_latency_penalty(d, mix)
+            penalty = penalty_cache[pkey]
+        vv, bb = np.meshgrid(vdd_grid, vbb_grid, indexing="ij")
+        grid = predict_grid(d, params, vv, bb, util=util)
+        for i in range(vv.shape[0]):
+            for j in range(vv.shape[1]):
+                m = {k: float(v[i, j]) for k, v in grid.items()}
+                if m["freq_ghz"] <= 0 or not np.isfinite(m["p_total_mw"]):
+                    continue
+                if with_latency:
+                    m["avg_latency_penalty"] = penalty
+                    m["avg_delay_ns"] = m["cycle_ns"] * (1.0 + penalty)
+                    m["e_per_flop_pj"] = m["p_total_mw"] / (
+                        2.0 * m["freq_ghz"] * util) / 1e3 * 1e3
+                pts.append(DsePoint(d, float(vv[i, j]), float(bb[i, j]), m))
+    return pts
+
+
+# ---------------------------------------------------------------------------
+# Pareto extraction
+# ---------------------------------------------------------------------------
+def pareto_mask(xs: np.ndarray, ys: np.ndarray) -> np.ndarray:
+    """Boolean mask of points Pareto-optimal under (minimize x, minimize y)."""
+    order = np.lexsort((ys, xs))
+    mask = np.zeros(len(xs), bool)
+    best_y = np.inf
+    for idx in order:
+        if ys[idx] < best_y - 1e-15:
+            mask[idx] = True
+            best_y = ys[idx]
+    return mask
+
+
+def throughput_pareto(points: Sequence[DsePoint]):
+    """Pareto set maximizing (GFLOPS/W, GFLOPS/mm^2) — Fig. 3 axes."""
+    xs = -np.array([p.metrics["gflops_per_w"] for p in points])
+    ys = -np.array([p.metrics["gflops_per_mm2"] for p in points])
+    mask = pareto_mask(xs, ys)
+    return [p for p, m in zip(points, mask) if m]
+
+
+def latency_pareto(points: Sequence[DsePoint]):
+    """Pareto set minimizing (energy/FLOP, average delay) — Fig. 4 axes."""
+    xs = np.array([p.metrics["e_per_flop_pj"] for p in points])
+    ys = np.array([p.metrics["avg_delay_ns"] for p in points])
+    mask = pareto_mask(xs, ys)
+    return [p for p, m in zip(points, mask) if m]
+
+
+def best_throughput_design(precision: str, params: TechParams | None = None,
+                           weight_area: float = 1.0) -> DsePoint:
+    """argmax of the geometric mean of the two throughput efficiencies."""
+    pts = sweep(enumerate_structures(precision), params)
+    score = [p.metrics["gflops_per_w"]
+             * p.metrics["gflops_per_mm2"] ** weight_area for p in pts]
+    return pts[int(np.argmax(score))]
+
+
+def best_latency_design(precision: str, params: TechParams | None = None
+                        ) -> DsePoint:
+    """argmin of energy x average-delay product (EDP on the paper's metric)."""
+    pts = sweep(enumerate_structures(precision), params, with_latency=True)
+    score = [p.metrics["e_per_flop_pj"] * p.metrics["avg_delay_ns"]
+             for p in pts]
+    return pts[int(np.argmin(score))]

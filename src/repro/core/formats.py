@@ -1,0 +1,167 @@
+"""Floating-point format definitions and round-to-format (RNE) in pure JAX.
+
+The FPMax paper evaluates FPUs at two IEEE precisions (SP/DP).  FPGen, the
+generator it silicon-validates, supports arbitrary (exp, man) formats; this
+module is the numeric foundation: a parameterized binary format and an exact
+round-to-nearest-even quantizer implemented with f32 arithmetic only, so the
+same code runs inside Pallas TPU kernels (TPUs have no f64).
+
+Exactness domain of ``quantize`` (f32 path):
+  * input is any finite f32, output is the correctly RNE-rounded value of the
+    target format, for every format with exp_bits <= 8 and man_bits <= 23.
+  * specials: NaN propagates, +-inf propagates, signed zero preserved.
+Overflow follows IEEE RNE: values >= maxfinite + 0.5 ulp round to +-inf.
+Subnormals of the target format are fully supported (the exponent clamp
+below makes the rounding grid flush to the fixed subnormal quantum).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@dataclasses.dataclass(frozen=True)
+class FloatFormat:
+    """A binary floating-point format (IEEE-754 style, with inf/NaN)."""
+
+    exp_bits: int
+    man_bits: int
+    name: str = ""
+
+    def __post_init__(self):
+        if not (1 <= self.exp_bits <= 11):
+            raise ValueError(f"exp_bits out of range: {self.exp_bits}")
+        if not (0 <= self.man_bits <= 52):
+            raise ValueError(f"man_bits out of range: {self.man_bits}")
+        if not self.name:
+            object.__setattr__(self, "name", f"e{self.exp_bits}m{self.man_bits}")
+
+    # --- derived constants -------------------------------------------------
+    @property
+    def bias(self) -> int:
+        return (1 << (self.exp_bits - 1)) - 1
+
+    @property
+    def emax(self) -> int:
+        """Largest unbiased exponent of a normal number (top exp reserved)."""
+        return self.bias
+
+    @property
+    def emin(self) -> int:
+        """Unbiased exponent of the smallest normal number."""
+        return 1 - self.bias
+
+    @property
+    def max_finite(self) -> float:
+        return float((2.0 - 2.0 ** (-self.man_bits)) * 2.0 ** self.emax)
+
+    @property
+    def min_normal(self) -> float:
+        return float(2.0 ** self.emin)
+
+    @property
+    def min_subnormal(self) -> float:
+        return float(2.0 ** (self.emin - self.man_bits))
+
+    @property
+    def bits(self) -> int:
+        return 1 + self.exp_bits + self.man_bits
+
+    def ulp(self, exponent: int) -> float:
+        return float(2.0 ** (max(exponent, self.emin) - self.man_bits))
+
+    def __repr__(self) -> str:  # compact for config dumps
+        return f"FloatFormat({self.name})"
+
+
+# Formats the framework uses by name. The paper's SP is IEEE binary32; DP is
+# binary64 (handled by the f64 softfloat paths, see softfloat.py).
+FP32 = FloatFormat(8, 23, "fp32")
+TF32 = FloatFormat(8, 10, "tf32")
+BF16 = FloatFormat(8, 7, "bf16")
+FP16 = FloatFormat(5, 10, "fp16")
+FP8_E4M3 = FloatFormat(4, 3, "fp8_e4m3")
+FP8_E5M2 = FloatFormat(5, 2, "fp8_e5m2")
+FP64 = FloatFormat(11, 52, "fp64")
+
+REGISTRY: Dict[str, FloatFormat] = {
+    f.name: f for f in (FP32, TF32, BF16, FP16, FP8_E4M3, FP8_E5M2, FP64)
+}
+
+
+def get_format(name: str) -> FloatFormat:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown format {name!r}; have {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+# ---------------------------------------------------------------------------
+# Round-to-format, f32 arithmetic only (Pallas/TPU safe).
+# ---------------------------------------------------------------------------
+def _unbiased_exp_f32(x: jnp.ndarray) -> jnp.ndarray:
+    """floor(log2|x|) for normal f32; -127 for zeros/subnormals (safe here)."""
+    bits = lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    return (jnp.right_shift(bits, jnp.uint32(23)) & jnp.uint32(0xFF)).astype(
+        jnp.int32
+    ) - 127
+
+
+def quantize(x: jnp.ndarray, fmt: FloatFormat) -> jnp.ndarray:
+    """RNE-round f32 values onto ``fmt``'s grid; result returned as f32.
+
+    Pure f32 arithmetic (plus integer bit ops): safe inside Pallas kernels.
+    Exact for every fmt with exp_bits <= 8, man_bits <= 23 (see module doc).
+    """
+    if fmt.exp_bits > 8 or fmt.man_bits > 23:
+        raise ValueError(f"f32 quantize path supports sub-f32 formats, got {fmt}")
+    x = x.astype(jnp.float32)
+    if fmt.exp_bits == 8 and fmt.man_bits == 23:
+        return x  # identity: fmt == f32
+
+    e = _unbiased_exp_f32(x)
+    q_exp = jnp.clip(e, fmt.emin, fmt.emax)
+    # scale = 2**(q_exp - man_bits), exact via exponent-bit construction
+    scale_exp = q_exp - fmt.man_bits
+    # scale_exp ranges within [emin - man, emax - man] subset of [-252, 127+0]
+    # 2**scale_exp may be f32-subnormal for extreme formats; build it as a
+    # product of two safe powers to stay exact.
+    half_lo = jnp.clip(scale_exp, -126, 127)
+    half_hi = scale_exp - half_lo  # remainder, 0 unless extreme
+    scale_lo = lax.bitcast_convert_type(
+        ((half_lo + 127).astype(jnp.uint32) << jnp.uint32(23)), jnp.float32
+    )
+    scale_hi = lax.bitcast_convert_type(
+        ((half_hi + 127).astype(jnp.uint32) << jnp.uint32(23)), jnp.float32
+    )
+    # y = RNE(x / scale) * scale ; division by a power of two is exact
+    q = jnp.round(x / scale_lo / scale_hi)
+    y = q * scale_lo * scale_hi
+    # IEEE RNE overflow: anything rounding above maxfinite goes to +-inf
+    max_f = jnp.float32(fmt.max_finite)
+    y = jnp.where(jnp.abs(y) > max_f, jnp.sign(y) * jnp.float32(jnp.inf), y)
+    # preserve specials and signed zero
+    y = jnp.where(jnp.isfinite(x), y, x)
+    y = jnp.where(x == 0, x, y)
+    return y.astype(jnp.float32)
+
+
+def quantize_stochastic(
+    x: jnp.ndarray, fmt: FloatFormat, key: jax.Array
+) -> jnp.ndarray:
+    """Stochastic rounding onto ``fmt`` (used by the compressed-gradient path)."""
+    x = x.astype(jnp.float32)
+    e = _unbiased_exp_f32(x)
+    q_exp = jnp.clip(e, fmt.emin, fmt.emax)
+    scale = jnp.exp2((q_exp - fmt.man_bits).astype(jnp.float32))
+    u = jax.random.uniform(key, x.shape, dtype=jnp.float32)
+    q = jnp.floor(x / scale + u)
+    y = q * scale
+    max_f = jnp.float32(fmt.max_finite)
+    y = jnp.clip(y, -max_f, max_f)
+    y = jnp.where(jnp.isfinite(x), y, x)
+    y = jnp.where(x == 0, x, y)
+    return y.astype(jnp.float32)

@@ -1,0 +1,97 @@
+"""Workload -> FPU design selection: the paper's technique as a framework
+feature.
+
+FPMax's thesis is that latency-bound and throughput-bound workloads want
+different FPU microarchitectures.  In this framework every (architecture x
+input shape) cell is classified by its execution profile (training/prefill =
+throughput-bound; autoregressive decode = latency-bound serial chains), FPGen
+DSE picks the matching unit, and the numerics policy (format + accumulation
+style for the fma_emu kernel / matmul layers) plus the body-bias energy
+telemetry follow from that design.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+from repro.core import dse
+from repro.core.body_bias import energy_per_op
+from repro.core.energy_model import TechParams, calibrate
+from repro.core.formats import BF16, FP32, FloatFormat
+from repro.core.fpu_arch import FABRICATED, FPUDesign
+
+
+@dataclasses.dataclass(frozen=True)
+class NumericsPolicy:
+    """What the model layers actually consume."""
+
+    fmt: FloatFormat  # operand format for emulated matmuls
+    accum_style: str  # 'fused' | 'cascade' | 'cascade_fwd' (kernels/fma_emu)
+    fpu_design: FPUDesign  # the FPGen unit this policy models
+    compute_dtype: str = "bfloat16"  # native dtype for full-scale runs
+
+    @property
+    def kernel_style(self) -> str:
+        return self.accum_style
+
+
+def _style_to_kernel(d: FPUDesign) -> str:
+    if d.style == "fma":
+        return "fused"
+    return "cascade_fwd" if d.forwarding else "cascade"
+
+
+@functools.lru_cache(maxsize=16)
+def select_fpu(workload: str, precision: str = "sp",
+               params: Optional[TechParams] = None) -> FPUDesign:
+    """DSE-pick the FPU for a workload class ('throughput' | 'latency')."""
+    params = params or calibrate()
+    if workload == "throughput":
+        return dse.best_throughput_design(precision, params).design
+    if workload == "latency":
+        return dse.best_latency_design(precision, params).design
+    raise ValueError(f"workload must be throughput|latency, got {workload!r}")
+
+
+def policy_for_shape(shape_kind: str, precision: str = "sp",
+                     fmt: FloatFormat = BF16) -> NumericsPolicy:
+    """Map an input-shape kind to its numerics policy.
+
+    train/prefill: massively parallel FMAC streams -> throughput unit (FMA).
+    decode: per-token serial dependence (one row through the whole model per
+    step) -> latency unit (CMA with forwarding).
+    """
+    workload = "latency" if "decode" in shape_kind or "long" in shape_kind \
+        else "throughput"
+    design = select_fpu(workload, precision)
+    return NumericsPolicy(fmt=fmt, accum_style=_style_to_kernel(design),
+                          fpu_design=design)
+
+
+def fabricated_policy(name: str, fmt: FloatFormat = FP32) -> NumericsPolicy:
+    """Policy modeling one of the four FPMax silicon units by name."""
+    d = FABRICATED[name]
+    return NumericsPolicy(fmt=fmt, accum_style=_style_to_kernel(d),
+                          fpu_design=d)
+
+
+def step_energy_telemetry(design: FPUDesign, *, achieved_flops: float,
+                          step_time_s: float, peak_flops: float,
+                          adaptive_bb: bool = True,
+                          params: Optional[TechParams] = None) -> dict:
+    """Per-step energy report for the training loop.
+
+    utilization = achieved/peak FLOP rate (from the roofline pass); the
+    body-bias policy turns that into J/step and GFLOPS/W exactly as the
+    paper's Fig. 4 analysis does for partially-utilized FPUs.
+    """
+    params = params or calibrate()
+    util = max(min(achieved_flops / step_time_s / peak_flops, 1.0), 1e-4)
+    e = energy_per_op(design, params, vdd=design.vdd, vbb_active=1.2,
+                      vbb_idle=(0.45 if adaptive_bb else None), util=util)
+    joules = e["e_total_pj"] * 1e-12 * achieved_flops
+    return dict(utilization=util, pj_per_flop=e["e_total_pj"],
+                joules_per_step=joules,
+                gflops_per_w=1.0 / (e["e_total_pj"] * 1e-3),
+                policy="adaptive_bb" if adaptive_bb else "static_bb")

@@ -1,0 +1,115 @@
+"""Dependency-trace extraction from jaxprs.
+
+The paper measures average latency penalty on SPEC FP traces.  Our framework
+equivalent: walk the jaxpr of a real train/serve step, classify every FP
+primitive into dependency structure, and compute the trace-weighted penalty a
+given FPU design would incur.  A dot_general of contraction length K is an
+accumulation chain of length K (distance-1 acc dependencies — the structure
+CMA forwarding targets); elementwise FP ops are issue-independent.
+
+This lets benchmarks report, per assigned architecture, how much a CMA-style
+unit would reduce stalls for *that* workload — the paper's Fig. 2(c) question
+asked of our own models.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List
+
+import jax
+import numpy as np
+
+from repro.core.fpu_arch import FPUDesign
+from repro.core.latency_sim import chain_penalty
+
+_DOT_PRIMS = {"dot_general"}
+_CONV_PRIMS = {"conv_general_dilated"}
+_ELEMWISE_FP = {
+    "add", "sub", "mul", "div", "exp", "log", "tanh", "logistic", "rsqrt",
+    "sqrt", "max", "min", "integer_pow", "pow", "erf", "neg",
+}
+_REDUCE_PRIMS = {"reduce_sum", "reduce_max", "reduce_min", "reduce_prod"}
+
+
+@dataclasses.dataclass
+class OpProfile:
+    kind: str  # 'chain' (acc-dependent) or 'independent'
+    chain_len: int  # accumulation chain length (1 for independent)
+    flops: float  # weight
+
+
+def _shape_size(aval) -> int:
+    n = 1
+    for s in aval.shape:
+        n *= int(s)
+    return n
+
+
+def profile_jaxpr(jaxpr: Any, out: List[OpProfile] | None = None
+                  ) -> List[OpProfile]:
+    """Recursively collect FP-op dependency profiles from a (closed) jaxpr."""
+    if hasattr(jaxpr, "jaxpr"):
+        jaxpr = jaxpr.jaxpr
+    out = out if out is not None else []
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        # recurse into sub-jaxprs (scan/while/cond/pjit/remat/custom_*)
+        for param in eqn.params.values():
+            sub = getattr(param, "jaxpr", None)
+            if sub is not None:
+                profile_jaxpr(param, out)
+            elif isinstance(param, (list, tuple)):
+                for p in param:
+                    if getattr(p, "jaxpr", None) is not None:
+                        profile_jaxpr(p, out)
+        if prim in _DOT_PRIMS:
+            dims = eqn.params["dimension_numbers"]
+            (lc, _), _ = dims
+            lhs = eqn.invars[0].aval
+            k = 1
+            for axis in lc:
+                k *= int(lhs.shape[axis])
+            out_size = _shape_size(eqn.outvars[0].aval)
+            out.append(OpProfile("chain", max(k, 1), 2.0 * k * out_size))
+        elif prim in _CONV_PRIMS:
+            lhs = eqn.invars[1].aval  # rhs kernel
+            k = _shape_size(lhs) // max(int(lhs.shape[-1]), 1)
+            out_size = _shape_size(eqn.outvars[0].aval)
+            out.append(OpProfile("chain", max(k, 1), 2.0 * k * out_size))
+        elif prim in _REDUCE_PRIMS:
+            in_size = _shape_size(eqn.invars[0].aval)
+            out_size = max(_shape_size(eqn.outvars[0].aval), 1)
+            out.append(OpProfile("chain", max(in_size // out_size, 1),
+                                 float(in_size)))
+        elif prim in _ELEMWISE_FP:
+            aval = eqn.outvars[0].aval
+            if jax.numpy.issubdtype(getattr(aval, "dtype", np.int32),
+                                    np.floating):
+                out.append(OpProfile("independent", 1, float(_shape_size(aval))))
+    return out
+
+
+def trace_penalty(design: FPUDesign, profiles: List[OpProfile]) -> float:
+    """FLOP-weighted average latency penalty of a design on a jaxpr profile."""
+    num, den = 0.0, 0.0
+    for p in profiles:
+        pen = chain_penalty(design, p.chain_len) if p.kind == "chain" else 0.0
+        num += pen * p.flops
+        den += p.flops
+    return num / max(den, 1.0)
+
+
+def profile_fn(fn, *example_args, **kw) -> List[OpProfile]:
+    """Trace a python/jax function and profile its jaxpr."""
+    jaxpr = jax.make_jaxpr(fn, **kw)(*example_args)
+    return profile_jaxpr(jaxpr)
+
+
+def summarize(profiles: List[OpProfile]) -> Dict[str, float]:
+    tot = sum(p.flops for p in profiles)
+    chain = sum(p.flops for p in profiles if p.kind == "chain")
+    lens = np.array([p.chain_len for p in profiles if p.kind == "chain"])
+    wts = np.array([p.flops for p in profiles if p.kind == "chain"])
+    mean_len = float((lens * wts).sum() / wts.sum()) if len(lens) else 0.0
+    return dict(total_flops=tot, chain_flop_frac=chain / max(tot, 1.0),
+                mean_chain_len=mean_len, n_ops=len(profiles))

@@ -1,0 +1,90 @@
+"""Deterministic, restart-safe synthetic LM data pipeline.
+
+Every batch is a pure function of (seed, step, shard) via stateless PRNG
+(threefry fold_in) — the property fault-tolerant training needs: a job that
+restarts from checkpoint step N regenerates byte-identical batches from N,
+and each data-parallel shard draws a disjoint stream without coordination.
+
+The synthetic distribution is a Zipf-ish unigram mix with Markov structure so
+losses actually *decrease* during smoke training (pure uniform tokens would
+pin CE at log V).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_shards: int = 1
+    shard_id: int = 0
+    prefix_tokens: int = 0  # vlm prefix embeddings
+    d_model: int = 0
+    frame_embeds: bool = False  # audio stub
+
+
+def _batch_keys(cfg: DataConfig, step: int):
+    key = jax.random.key(cfg.seed)
+    key = jax.random.fold_in(key, step)
+    key = jax.random.fold_in(key, cfg.shard_id)
+    return jax.random.split(key, 4)
+
+
+def _markov_tokens(key, shape, vocab):
+    """Zipf unigram + first-order structure: t_{i+1} depends on t_i."""
+    k1, k2 = jax.random.split(key)
+    # Zipf-ish marginal via squared uniform
+    u = jax.random.uniform(k1, shape)
+    base = (u * u * (vocab - 1)).astype(jnp.int32)
+    # Markov: half the positions copy-shift their predecessor (+1 mod V)
+    flip = jax.random.bernoulli(k2, 0.5, shape)
+    shifted = jnp.roll(base, 1, axis=-1)
+    mixed = jnp.where(flip, (shifted + 1) % vocab, base)
+    return mixed
+
+
+def make_batch(cfg: DataConfig, step: int) -> Dict[str, jnp.ndarray]:
+    ks = _batch_keys(cfg, step)
+    b = cfg.global_batch // cfg.n_shards
+    toks = _markov_tokens(ks[0], (b, cfg.seq_len + 1),
+                          jnp.int32(cfg.vocab_size))
+    batch: Dict[str, jnp.ndarray] = {
+        "tokens": toks[:, :-1],
+        "labels": toks[:, 1:],
+    }
+    if cfg.prefix_tokens:
+        batch["prefix_embeds"] = jax.random.normal(
+            ks[1], (b, cfg.prefix_tokens, cfg.d_model), jnp.float32)
+    if cfg.frame_embeds:
+        batch["frame_embeds"] = jax.random.normal(
+            ks[2], (b, cfg.seq_len, cfg.d_model), jnp.float32)
+        del batch["tokens"]
+    return batch
+
+
+def data_iterator(cfg: DataConfig):
+    """step -> batch callable (the restart-safe interface train_loop uses)."""
+    def get(step: int):
+        return make_batch(cfg, step)
+    return get
+
+
+def for_arch(arch_cfg, seq_len: int, global_batch: int, *, seed: int = 0,
+             n_shards: int = 1, shard_id: int = 0) -> DataConfig:
+    prefix = arch_cfg.n_prefix_tokens if arch_cfg.frontend == "vision" else 0
+    return DataConfig(
+        vocab_size=arch_cfg.vocab_size,
+        seq_len=seq_len - prefix,
+        global_batch=global_batch, seed=seed,
+        n_shards=n_shards, shard_id=shard_id,
+        prefix_tokens=prefix, d_model=arch_cfg.d_model,
+        frame_embeds=arch_cfg.frontend == "audio")

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the FPMax numerics policies + compute hot spots.
+
+fma_emu.py         — emulated-precision matmul (fused/cascade/cascade_fwd)
+quantize_kernel.py — elementwise round-to-format
+ssm_scan.py        — fused selective-scan (the Mamba recurrence in VMEM;
+                     kills the dominant memory-roofline term of the SSM archs)
+ops.py             — jit'd public wrappers w/ backend dispatch
+ref.py             — pure-jnp oracles (bitwise-matching k-block semantics)
+"""
+from repro.kernels.ops import emulated_matmul, quantize_tensor  # noqa: F401

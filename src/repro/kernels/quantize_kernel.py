@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: elementwise round-to-format (RNE) on f32 tensors.
+
+Used by the numerics policies to quantize activations/gradients to a generated
+FPU format.  Trivial compute, but bandwidth-critical at scale: the BlockSpec
+keeps (rows x 128-lane) tiles streaming HBM->VMEM->HBM with no transposes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.formats import FloatFormat, quantize
+
+
+def _quantize_kernel(x_ref, o_ref, *, fmt: FloatFormat):
+    o_ref[...] = quantize(x_ref[...], fmt)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("fmt", "block_rows", "interpret")
+)
+def quantize_2d(
+    x: jax.Array,
+    *,
+    fmt: FloatFormat,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Round a 2D f32 array onto fmt's grid. Lane dim padded to 128."""
+    if x.ndim != 2:
+        raise ValueError(f"quantize_2d wants 2D, got {x.shape}")
+    m, n = x.shape
+    bm = min(block_rows, max(8, m))
+    pm, pn = (-m) % bm, (-n) % 128
+    x_p = jnp.pad(x.astype(jnp.float32), ((0, pm), (0, pn)))
+    gm = (m + pm) // bm
+    bn = n + pn
+    out = pl.pallas_call(
+        functools.partial(_quantize_kernel, fmt=fmt),
+        grid=(gm,),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m + pm, n + pn), jnp.float32),
+        interpret=interpret,
+    )(x_p)
+    return out[:m, :n]
+
+
+def quantize_nd(x: jax.Array, *, fmt: FloatFormat, interpret: bool = False):
+    """Quantize an arbitrary-rank tensor by folding leading dims."""
+    shape = x.shape
+    if x.ndim == 0:
+        return quantize(x, fmt)
+    lead = 1
+    for d in shape[:-1]:
+        lead *= d
+    y = quantize_2d(x.reshape(lead, shape[-1]), fmt=fmt, interpret=interpret)
+    return y.reshape(shape)

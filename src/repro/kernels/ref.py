@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for the Pallas kernels (bitwise-matching k-block semantics).
+
+``fma_emu_matmul_ref`` reproduces exactly the kernel's blockwise accumulation
+(quantize operands -> f32 block dot -> style-dependent rounding of the
+accumulator), so interpret-mode kernel output must equal it bit-for-bit.
+
+``repro.core.softfloat`` holds the *per-scalar* hardware semantics; the
+relation between the two granularities is property-tested in
+tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.formats import FloatFormat, quantize
+
+
+def fma_emu_matmul_ref(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    fmt: FloatFormat,
+    style: str = "fused",
+    out_fmt: FloatFormat | None = None,
+    bk: int = 128,
+) -> jax.Array:
+    """Reference for fma_emu: same k-block rounding schedule, pure jnp."""
+    m, kdim = a.shape
+    _, n = b.shape
+    pk = (-kdim) % bk
+    a_p = jnp.pad(a.astype(jnp.float32), ((0, 0), (0, pk)))
+    b_p = jnp.pad(b.astype(jnp.float32), ((0, pk), (0, 0)))
+    gk = (kdim + pk) // bk
+    a_blocks = a_p.reshape(m, gk, bk).transpose(1, 0, 2)  # (gk, m, bk)
+    b_blocks = b_p.reshape(gk, bk, n)
+
+    def step(acc, ab):
+        a_k, b_k = ab
+        part = jnp.dot(
+            quantize(a_k, fmt), quantize(b_k, fmt),
+            preferred_element_type=jnp.float32,
+        )
+        if style == "fused":
+            acc = acc + part
+        elif style == "cascade_fwd":
+            acc = acc + quantize(part, fmt)
+        elif style == "cascade":
+            acc = quantize(acc + quantize(part, fmt), fmt)
+        else:
+            raise ValueError(f"unknown style {style!r}")
+        return acc, None
+
+    acc0 = jnp.zeros((m, n), jnp.float32)
+    acc, _ = lax.scan(step, acc0, (a_blocks, b_blocks))
+    if out_fmt is not None:
+        acc = quantize(acc, out_fmt)
+    return acc
+
+
+def quantize_ref(x: jax.Array, *, fmt: FloatFormat) -> jax.Array:
+    """Reference for the quantize kernel: formats.quantize itself."""
+    return quantize(x, fmt)

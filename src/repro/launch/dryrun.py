@@ -1,0 +1,168 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be run as a script/module (the XLA_FLAGS line above executes before any
+jax import — jax locks the device count at first init).
+
+Per cell: jit with explicit in_shardings, .lower(**ShapeDtypeStructs),
+.compile(), then record memory_analysis() + cost_analysis() + the parsed
+collective schedule into results/dryrun_<mesh>.json for §Dry-run / §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # everything
+  PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh single --shape train_4k
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import ARCH_IDS, SHAPES, cells, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import make_cell
+from repro.parallel import sharding as sh
+from repro.roofline.analysis import analyze
+
+# Default optimization level: fusion must run so memory_analysis() and the
+# HBM-traffic roofline term reflect what a real backend would allocate/move.
+# (O0 compiles 3x faster but reports unfused, ~10x-inflated traffic.)
+CPU_COMPILER_OPTIONS = {
+    "xla_llvm_disable_expensive_passes": True,  # skip LLVM codegen cost only
+}
+
+
+# per-arch gradient-accumulation defaults sized so remat carries
+# (n_layers x B_local x S x d_model) + optimizer state fit a 16GB v5e
+# Post-hillclimb picks (EXPERIMENTS.md §Perf): collective bytes scale with
+# microbatch count (per-mb dW reductions), so each arch runs the FEWEST
+# microbatches whose remat carries + optimizer still fit 16GB/chip.
+MICROBATCHES = {
+    "falcon-mamba-7b": 1,
+    "deepseek-67b": 4,
+    "chatglm3-6b": 4,
+    "starcoder2-7b": 4,
+    "mixtral-8x7b": 4,
+}
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             microbatches: int | None = None, triangle_skip: bool = False,
+             verbose: bool = True):
+    if microbatches is None:
+        microbatches = MICROBATCHES.get(arch, 4)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = sh.make_context(mesh)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    chips = mesh.size
+    t0 = time.time()
+    with sh.use_mesh(ctx):
+        cell = make_cell(arch, shape_name, ctx, microbatches=microbatches,
+                         triangle_skip=triangle_skip)
+        # donate the training state / decode cache (optimizer and KV-cache
+        # updates alias in place, exactly as the real training loop runs)
+        donate = (0,) if cell.kind == "train" else \
+            ((1,) if cell.kind == "decode" else ())
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*cell.arg_shapes)
+        t_lower = time.time() - t0
+        compiled = lowered.compile(compiler_options=CPU_COMPILER_OPTIONS)
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    mem_info = {}
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                mem_info[k] = int(v)
+
+    report = analyze(arch, shape_name, mesh_name, chips, compiled,
+                     get_config(arch), SHAPES[shape_name])
+    row = report.as_dict()
+    row.update({
+        "kind": cell.kind,
+        "memory": mem_info,
+        "bytes_per_device_hbm": (mem_info.get("argument_size_in_bytes", 0)
+                                 + mem_info.get("temp_size_in_bytes", 0)),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "status": "ok",
+    })
+    if verbose:
+        print(f"[{mesh_name}] {arch} x {shape_name}: OK "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s, "
+              f"bottleneck={row['bottleneck']}, "
+              f"roofline_frac={row['roofline_fraction']:.3f})", flush=True)
+        print(f"  memory_analysis: {mem_info}", flush=True)
+        print(f"  cost: flops/dev={row['flops_per_device']:.3e} "
+              f"bytes/dev={row['bytes_per_device']:.3e} "
+              f"coll/dev={row['collective_bytes_per_device']:.3e}",
+              flush=True)
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="both")
+    ap.add_argument("--out", default="results")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--triangle-skip", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    for multi_pod in meshes:
+        mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+        path = os.path.join(args.out, f"dryrun_{mesh_name}.json")
+        results = {}
+        if os.path.exists(path):
+            with open(path) as f:
+                results = json.load(f)
+        for arch in archs:
+            shape_names = cells(arch)
+            if args.shape:
+                if args.shape not in shape_names:
+                    print(f"[{mesh_name}] {arch} x {args.shape}: SKIPPED "
+                          f"(no sub-quadratic path; see DESIGN.md)")
+                    continue
+                shape_names = [args.shape]
+            for shape_name in shape_names:
+                key = f"{arch}|{shape_name}"
+                if results.get(key, {}).get("status") == "ok":
+                    print(f"[{mesh_name}] {key}: cached")
+                    continue
+                try:
+                    results[key] = run_cell(arch, shape_name,
+                                            multi_pod=multi_pod,
+                                            microbatches=args.microbatches,
+                                            triangle_skip=args.triangle_skip)
+                except Exception as e:  # noqa: BLE001 - record and continue
+                    traceback.print_exc()
+                    results[key] = {"status": f"FAIL: {type(e).__name__}: {e}"}
+                with open(path, "w") as f:
+                    json.dump(results, f, indent=1)
+    # summary
+    for multi_pod in meshes:
+        mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+        path = os.path.join(args.out, f"dryrun_{mesh_name}.json")
+        with open(path) as f:
+            results = json.load(f)
+        ok = sum(1 for v in results.values() if v.get("status") == "ok")
+        print(f"{mesh_name}: {ok}/{len(results)} cells OK")
+
+
+if __name__ == "__main__":
+    main()

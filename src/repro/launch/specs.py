@@ -1,0 +1,147 @@
+"""ShapeDtypeStruct stand-ins + shardings for every dry-run cell.
+
+``input_specs(arch, shape)`` returns everything needed to lower the right
+step function without allocating a single real array:
+
+  * train cells  -> (train_step, (TrainState, batch) shapes, shardings)
+  * prefill cells-> (prefill_fn, (params, tokens...) shapes, shardings)
+  * decode cells -> (serve_step, (params, cache, tokens) shapes, shardings)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec, SHAPES, get_config
+from repro.models import LM
+from repro.parallel import sharding as sh
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_loop import make_train_state, make_train_step
+
+
+class CellSpec(NamedTuple):
+    fn: Any  # function to lower
+    arg_shapes: Tuple  # ShapeDtypeStruct pytrees
+    in_shardings: Tuple
+    kind: str
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def _batch_shapes(cfg: ArchConfig, shape: ShapeSpec):
+    b, s = shape.global_batch, shape.seq_len
+    prefix = cfg.n_prefix_tokens if cfg.frontend == "vision" else 0
+    s_text = s - prefix
+    out: Dict[str, Any] = {}
+    if cfg.frontend == "audio":
+        out["frame_embeds"] = _sds((b, s, cfg.d_model), jnp.float32)
+        out["labels"] = _sds((b, s), jnp.int32)
+        return out
+    out["tokens"] = _sds((b, s_text), jnp.int32)
+    out["labels"] = _sds((b, s_text), jnp.int32)
+    if prefix:
+        out["prefix_embeds"] = _sds((b, prefix, cfg.d_model), jnp.float32)
+    return out
+
+
+def _batch_specs(batch_shapes, ctx):
+    def one(leaf):
+        logical = ("batch",) + (None,) * (len(leaf.shape) - 1)
+        return NamedSharding(ctx.mesh, sh.spec_for(logical, leaf.shape, ctx))
+    return jax.tree.map(one, batch_shapes)
+
+
+def _cache_specs(model: LM, cache_shapes, batch: int, ctx):
+    """Sharding for the decode cache (DESIGN.md §6: SP for B=1 long ctx)."""
+    batch_ok = batch % ctx.batch_size_shards == 0
+
+    def one(path, leaf):
+        name = str(getattr(path[-1], "key", ""))
+        nd = leaf.ndim
+        if nd == 0:
+            return NamedSharding(ctx.mesh, P())
+        if name in ("k", "v"):  # (L/apps, B, S, Hkv, D)
+            heads_ok = leaf.shape[3] % ctx.tensor_size == 0
+            if batch_ok and heads_ok:
+                logical = (None, "batch", None, "tensor", None)
+            elif batch_ok:
+                # few KV heads (GQA): shard head_dim over the model axis —
+                # cache writes stay local (S-sharding would gather the whole
+                # cache per token) and the contracted-D score einsum psums
+                # only (B,H,S) scores per layer (DESIGN.md §6)
+                logical = (None, "batch", None, None, "tensor")
+            else:
+                logical = (None, None, "data", "tensor", None)
+        elif name == "conv":  # (L, B, K-1, C)
+            logical = (None, "batch" if batch_ok else None, None, "tensor")
+        elif name == "h":  # (L,B,d_in,N) or (L,B,H,P,N)
+            logical = (None, "batch" if batch_ok else None, "tensor") \
+                + (None,) * (nd - 3)
+        else:
+            logical = (None,) * nd
+        return NamedSharding(ctx.mesh, sh.spec_for(logical, leaf.shape, ctx))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def make_cell(arch: str, shape_name: str, ctx: sh.MeshContext, *,
+              opt_cfg: Optional[AdamWConfig] = None,
+              microbatches: int = 1,
+              triangle_skip: bool = False) -> CellSpec:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    model = LM(cfg)
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    param_shapes = jax.eval_shape(model.init, jax.random.key(0))
+    param_specs = sh.param_specs(param_shapes, cfg.n_experts, ctx)
+    param_sh = sh.named_shardings(param_specs, ctx)
+
+    if shape.kind == "train":
+        state_shapes = jax.eval_shape(
+            functools.partial(make_train_state, model,
+                              opt_cfg=opt_cfg), jax.random.key(0))
+        state_specs = sh.param_specs(state_shapes, cfg.n_experts, ctx)
+        state_sh = sh.named_shardings(state_specs, ctx)
+        batch_shapes = _batch_shapes(cfg, shape)
+        batch_sh = _batch_specs(batch_shapes, ctx)
+        step = make_train_step(model, opt_cfg, microbatches=microbatches,
+                               grad_shardings=state_sh.params)
+        return CellSpec(step, (state_shapes, batch_shapes),
+                        (state_sh, batch_sh), "train")
+
+    if shape.kind == "prefill":
+        batch_shapes = _batch_shapes(cfg, shape)
+        batch_sh = _batch_specs(batch_shapes, ctx)
+
+        def prefill_fn(params, batch):
+            return model.prefill(
+                params, batch.get("tokens"),
+                prefix_embeds=batch.get("prefix_embeds"),
+                frame_embeds=batch.get("frame_embeds"),
+                max_len=shape.seq_len)
+
+        return CellSpec(prefill_fn, (param_shapes, batch_shapes),
+                        (param_sh, batch_sh), "prefill")
+
+    # decode: one new token against a cache of seq_len
+    b = shape.global_batch
+    cache_shapes = jax.eval_shape(
+        functools.partial(model.init_cache, b, shape.seq_len))
+    cache_sh = _cache_specs(model, cache_shapes, b, ctx)
+    tok_shape = _sds((b, 1), jnp.int32)
+    tok_sh = NamedSharding(ctx.mesh,
+                           sh.spec_for(("batch", None), (b, 1), ctx))
+
+    def serve_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    return CellSpec(serve_step, (param_shapes, cache_shapes, tok_shape),
+                    (param_sh, cache_sh, tok_sh), "decode")

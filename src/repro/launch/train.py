@@ -1,0 +1,80 @@
+"""Training launcher: end-to-end driver over any assigned architecture.
+
+On this CPU container it trains reduced configs eagerly; pass --devices N to
+run data/tensor-sharded on N forced host devices (the same pjit program that
+the production mesh compiles in dryrun.py).
+
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b --steps 100
+  PYTHONPATH=src python -m repro.launch.train --arch mixtral-8x7b \
+      --devices 8 --data 4 --model 2 --steps 50
+"""
+import argparse
+import os
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host devices and shard (needs --data/--model)")
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}")
+
+    import jax
+
+    from repro.configs.base import get_config
+    from repro.data.pipeline import for_arch, make_batch
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import LM
+    from repro.parallel import sharding as sh
+    from repro.train.checkpoint import CheckpointManager
+    from repro.train.optimizer import AdamWConfig
+    from repro.train.train_loop import (make_train_state, make_train_step,
+                                        train_loop)
+
+    cfg = get_config(args.arch).reduced()
+    model = LM(cfg)
+    opt = AdamWConfig(lr=3e-3, warmup_steps=10, total_steps=args.steps,
+                      compress_grads=args.compress_grads)
+    dcfg = for_arch(cfg, seq_len=args.seq_len, global_batch=args.batch)
+    mgr = CheckpointManager(args.ckpt_dir, keep=3) if args.ckpt_dir else None
+
+    ctx = None
+    if args.devices:
+        mesh = make_host_mesh(data=args.data, model=args.model)
+        ctx = sh.make_context(mesh)
+
+    with sh.use_mesh(ctx):
+        state = make_train_state(model, jax.random.key(0), opt)
+        if ctx is not None:
+            specs = sh.param_specs(state, cfg.n_experts, ctx)
+            state = jax.device_put(state, sh.named_shardings(specs, ctx))
+        step = make_train_step(model, opt, microbatches=args.microbatches)
+        state, hist = train_loop(
+            model, state, step, lambda i: make_batch(dcfg, i),
+            n_steps=args.steps, log_every=10,
+            checkpoint_manager=mgr, checkpoint_every=args.ckpt_every)
+    for row in hist[-3:]:
+        print({k: round(v, 4) if isinstance(v, float) else v
+               for k, v in row.items()})
+    if mgr:
+        mgr.wait()
+    print(f"trained {args.arch} (reduced) for {args.steps} steps "
+          f"on {args.devices or 1} device(s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Model zoo: decoder LMs across the six assigned families."""
+from repro.models.model import LM, DecodeCache  # noqa: F401

@@ -1,0 +1,153 @@
+"""Attention: blockwise (flash-style) training/prefill path + decode path.
+
+The blockwise implementation keeps live activation memory to
+O(block_q x block_k) per head instead of O(S^2) — this is what makes the
+32k-prefill dry-run cells *fit* in the memory analysis.  Online softmax with
+masked-probability accumulation (p is multiplied by the mask, so fully-masked
+rows yield 0/eps = 0 rather than NaN).
+
+GQA is computed grouped (no KV head repetition): q is viewed as
+(B, S, Hkv, G, D) and contracted against (B, S, Hkv, D).
+
+Supports: causal masking, sliding-window (Mixtral), decode offsets, and a
+``triangle_skip`` mode (per-q-block KV extent — skips fully-masked KV blocks,
+halving causal FLOPs; used by the perf pass)."""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1.0e30
+
+
+def _attend_block(q_blk, k_blk, v_blk, q_pos, k_pos, *, scale, causal,
+                  window, kv_len):
+    """One (q-block, kv-block) online-softmax update.
+
+    q_blk: (B, bq, Hkv, G, D); k_blk/v_blk: (B, bk, Hkv, D).
+    Returns (s_masked_max_input, p, pv): p already mask-multiplied, f32.
+    """
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk,
+                   preferred_element_type=jnp.float32) * scale
+    mask = (k_pos[None, :] < kv_len)
+    if causal:
+        mask = mask & (k_pos[None, :] <= q_pos[:, None])
+    if window:
+        mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+    mask = mask[None, None, None]  # (1,1,1,bq,bk)
+    s_for_max = jnp.where(mask, s, NEG_INF)
+    return s, s_for_max, mask
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_offset=0, kv_len=None, block_q: int = 1024,
+                    block_k: int = 1024, triangle_skip: bool = False):
+    """q: (B,Sq,Hq,D); k,v: (B,Sk,Hkv,D) -> (B,Sq,Hq,D).
+
+    q_offset: absolute position of q[0] (decode/chunked prefill).
+    kv_len: actual valid KV length (<= Sk), defaults to Sk.
+    """
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+    kv_len = Sk if kv_len is None else kv_len
+
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    pq, pk = (-Sq) % bq, (-Sk) % bk
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq, nk = (Sq + pq) // bq, (Sk + pk) // bk
+
+    qb = qp.reshape(B, nq, bq, Hkv, G, D)
+    kb = kp.reshape(B, nk, bk, Hkv, D)
+    vb = vp.reshape(B, nk, bk, Hkv, D)
+
+    def kv_step(carry, inputs, q_blk, q_pos):
+        m, l, acc = carry
+        k_blk, v_blk, kj = inputs
+        k_pos = kj * bk + jnp.arange(bk)
+        s, s_for_max, mask = _attend_block(
+            q_blk, k_blk, v_blk, q_pos, k_pos, scale=scale, causal=causal,
+            window=window, kv_len=kv_len)
+        m_new = jnp.maximum(m, jnp.max(s_for_max, axis=-1))
+        m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None]) * mask  # (B,Hkv,G,bq,bk) f32
+        corr = jnp.exp(jnp.minimum(m - m_safe, 0.0)) * (m > NEG_INF / 2)
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v_blk.dtype), v_blk,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr[..., None] + pv
+        return (m_new, l, acc), None
+
+    def q_block_out(qi, q_blk, n_kv_blocks):
+        q_pos = q_offset + qi * bq + jnp.arange(bq)
+        init = (jnp.full((B, Hkv, G, bq), NEG_INF, jnp.float32),
+                jnp.zeros((B, Hkv, G, bq), jnp.float32),
+                jnp.zeros((B, Hkv, G, bq, D), jnp.float32))
+        step = functools.partial(kv_step, q_blk=q_blk, q_pos=q_pos)
+        (m, l, acc), _ = lax.scan(
+            step, init,
+            (kb[:, :n_kv_blocks].swapaxes(0, 1),
+             vb[:, :n_kv_blocks].swapaxes(0, 1),
+             jnp.arange(n_kv_blocks)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        # (B,Hkv,G,bq,D) -> (B,bq,Hkv,G,D)
+        return out.transpose(0, 3, 1, 2, 4)
+
+    if triangle_skip and causal and nq > 1:
+        # static per-q-block KV extents: q block i only attends KV blocks
+        # whose start <= q_offset + (i+1)*bq - 1 (and within window).
+        outs = []
+        off = int(q_offset) if not hasattr(q_offset, "shape") else 0
+        for i in range(nq):
+            hi = off + (i + 1) * bq
+            nkv = min(nk, max(1, -(-hi // bk)))
+            outs.append(q_block_out(i, qb[:, i], nkv))
+        out = jnp.stack(outs, axis=1)
+    else:
+        def q_step(_, inputs):
+            qi, q_blk = inputs
+            return None, q_block_out(qi, q_blk, nk)
+        _, out = lax.scan(q_step, None,
+                          (jnp.arange(nq), qb.swapaxes(0, 1)))
+        out = out.swapaxes(0, 1)  # (B, nq, bq, Hkv, G, D)
+
+    out = out.reshape(B, nq * bq, Hkv * G, D)[:, :Sq]
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0):
+    """Single-step attention against a cache.
+
+    q: (B,1,Hq,D); caches: (B,Smax,Hkv,D); cache_len: () or (B,) current
+    valid length (the new token's K/V must already be written at
+    cache_len-1).  Returns (B,1,Hq,D)."""
+    B, Smax, Hkv, D = k_cache.shape
+    Hq = q.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Hkv, G, D)
+    kc = k_cache.astype(q.dtype)  # fp8 caches cast up for the MXU
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, kc,
+                   preferred_element_type=jnp.float32) * scale
+    k_pos = jnp.arange(Smax)
+    cl = jnp.asarray(cache_len)
+    cl = cl[:, None] if cl.ndim == 1 else cl[None, None]
+    valid = k_pos[None, :] < cl  # (B or 1, Smax)
+    if window:
+        valid = valid & (k_pos[None, :] >= cl - window)
+    valid = valid[:, None, None, :]
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    vc = v_cache.astype(q.dtype)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(q.dtype), vc,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, Hq, D).astype(q.dtype)

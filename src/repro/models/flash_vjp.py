@@ -1,0 +1,193 @@
+"""Flash attention with a custom VJP (recompute-in-backward).
+
+Without this, the VJP of the blockwise forward scan saves every block's
+probability matrix — O(S^2) f32 per layer — which is exactly what flash
+attention exists to avoid.  The backward here recomputes s/p per (q,kv)
+block from the saved (out, logsumexp) row statistics and accumulates
+dq/dk/dv blockwise, so training-path attention memory is O(S * D) + one
+block, matching the TPU kernel implementations.
+
+Forward semantics are identical to attention.flash_attention (same masks,
+same grouped-GQA contraction) — asserted by tests against the pure version.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1.0e30
+
+
+def _masks(q_pos, k_pos, *, causal, window, kv_len):
+    m = (k_pos[None, :] < kv_len)
+    if causal:
+        m = m & (k_pos[None, :] <= q_pos[:, None])
+    if window:
+        m = m & (k_pos[None, :] > q_pos[:, None] - window)
+    return m[None, None, None]  # (1,1,1,bq,bk)
+
+
+def _fwd_scan(qb, kb, vb, *, scale, causal, window, kv_len, q_offset, bq, bk):
+    """Returns out blocks and row stats (m, l) per q block."""
+    # named scope propagates to HLO metadata: the roofline's fused-kernel
+    # traffic attribution (roofline/fused_model.py) keys on it
+    B, nq, _, Hkv, G, D = qb.shape
+    nk = kb.shape[1]
+
+    def q_step(_, inputs):
+        qi, q_blk = inputs
+        q_pos = q_offset + qi * bq + jnp.arange(bq)
+
+        def kv_step(carry, kv):
+            m, l, acc = carry
+            k_blk, v_blk, kj = kv
+            k_pos = kj * bk + jnp.arange(bk)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _masks(q_pos, k_pos, causal=causal, window=window,
+                          kv_len=kv_len)
+            s_m = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s_m, axis=-1))
+            m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+            p = jnp.exp(s - m_safe[..., None]) * mask
+            corr = jnp.exp(jnp.minimum(m - m_safe, 0.0)) * (m > NEG_INF / 2)
+            l = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v_blk.dtype), v_blk,
+                            preferred_element_type=jnp.float32)
+            acc = acc * corr[..., None] + pv
+            return (m_new, l, acc), None
+
+        init = (jnp.full((B, Hkv, G, bq), NEG_INF, jnp.float32),
+                jnp.zeros((B, Hkv, G, bq), jnp.float32),
+                jnp.zeros((B, Hkv, G, bq, D), jnp.float32))
+        (m, l, acc), _ = lax.scan(
+            kv_step, init, (kb.swapaxes(0, 1), vb.swapaxes(0, 1),
+                            jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = jnp.where(l > 0, jnp.where(m <= NEG_INF / 2, 0.0, m)
+                        + jnp.log(jnp.maximum(l, 1e-30)), NEG_INF)
+        return None, (out, lse)
+
+    _, (outs, lses) = lax.scan(q_step, None,
+                               (jnp.arange(nq), qb.swapaxes(0, 1)))
+    # outs: (nq, B, Hkv, G, bq, D); lses: (nq, B, Hkv, G, bq)
+    return outs.swapaxes(0, 1), lses.swapaxes(0, 1)
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash(qb, kb, vb, scale, causal, window, kv_len, q_offset, blocks):
+    bq, bk = blocks
+    with jax.named_scope("flash_attention_kernel"):
+        outs, _ = _fwd_scan(qb, kb, vb, scale=scale, causal=causal,
+                            window=window, kv_len=kv_len, q_offset=q_offset,
+                            bq=bq, bk=bk)
+    return outs
+
+
+def _flash_fwd(qb, kb, vb, scale, causal, window, kv_len, q_offset, blocks):
+    bq, bk = blocks
+    with jax.named_scope("flash_attention_kernel"):
+        outs, lses = _fwd_scan(qb, kb, vb, scale=scale, causal=causal,
+                               window=window, kv_len=kv_len,
+                               q_offset=q_offset, bq=bq, bk=bk)
+    return outs, (qb, kb, vb, outs, lses)
+
+
+def _flash_bwd(scale, causal, window, kv_len, q_offset, blocks, res, do):
+    qb, kb, vb, outs, lses = res
+    return _flash_bwd_scoped(scale, causal, window, kv_len, q_offset, blocks,
+                             (qb, kb, vb, outs, lses), do)
+
+
+def _flash_bwd_scoped(scale, causal, window, kv_len, q_offset, blocks, res,
+                      do):
+    qb, kb, vb, outs, lses = res
+    bq, bk = blocks
+    B, nq, _, Hkv, G, D = qb.shape
+    nk = kb.shape[1]
+    # D_i = rowsum(do * out) per row
+    scope = jax.named_scope("flash_attention_kernel")
+    scope.__enter__()
+    delta = jnp.sum(do * outs, axis=-1)  # (B, nq, Hkv, G, bq)
+
+    def q_step(carry, inputs):
+        dk_all, dv_all = carry
+        qi, q_blk, do_blk, lse_blk, delta_blk = inputs
+        q_pos = q_offset + qi * bq + jnp.arange(bq)
+
+        def kv_step(carry_kv, kv):
+            dq_blk, dk_all, dv_all = carry_kv
+            k_blk, v_blk, kj = kv
+            k_pos = kj * bk + jnp.arange(bk)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _masks(q_pos, k_pos, causal=causal, window=window,
+                          kv_len=kv_len)
+            # fully-masked rows stored lse=NEG_INF; guard the exp
+            lse_safe = jnp.where(lse_blk <= NEG_INF / 2, 0.0, lse_blk)
+            p = jnp.exp(s - lse_safe[..., None]) * mask  # (B,Hkv,G,bq,bk)
+            dv_j = jnp.einsum("bhgqk,bhgqd->bkhgd", p,
+                              do_blk.astype(jnp.float32))
+            dp = jnp.einsum("bhgqd,bkhd->bhgqk",
+                            do_blk.astype(jnp.float32),
+                            v_blk.astype(jnp.float32))
+            ds = p * (dp - delta_blk[..., None]) * scale
+            dq_blk = dq_blk + jnp.einsum("bhgqk,bkhd->bqhgd", ds,
+                                         k_blk.astype(jnp.float32))
+            dk_j = jnp.einsum("bhgqk,bqhgd->bkhgd", ds,
+                              q_blk.astype(jnp.float32))
+            dk_all = dk_all.at[:, kj].add(dk_j.sum(axis=3))  # sum over G
+            dv_all = dv_all.at[:, kj].add(dv_j.sum(axis=3))
+            return (dq_blk, dk_all, dv_all), None
+
+        init_dq = jnp.zeros((B, bq, Hkv, G, D), jnp.float32)
+        (dq_blk, dk_all, dv_all), _ = lax.scan(
+            kv_step, (init_dq, dk_all, dv_all),
+            (kb.swapaxes(0, 1), vb.swapaxes(0, 1), jnp.arange(nk)))
+        return (dk_all, dv_all), dq_blk
+
+    # do: (B, nq, Hkv, G, bq, D) from caller (already block-shaped)
+    dk0 = jnp.zeros((B, nk, bk, Hkv, D), jnp.float32)
+    dv0 = jnp.zeros((B, nk, bk, Hkv, D), jnp.float32)
+    (dk, dv), dqs = lax.scan(
+        q_step, (dk0, dv0),
+        (jnp.arange(nq), qb.swapaxes(0, 1), do.swapaxes(0, 1),
+         lses.swapaxes(0, 1), delta.swapaxes(0, 1)))
+    dq = dqs.swapaxes(0, 1)  # (B, nq, bq, Hkv, G, D)
+    out = (dq.astype(qb.dtype), dk.astype(kb.dtype), dv.astype(vb.dtype))
+    scope.__exit__(None, None, None)
+    return out
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention_trainable(q, k, v, *, causal: bool = True,
+                              window: int = 0, q_offset=0, kv_len=None,
+                              block_q: int = 1024, block_k: int = 1024):
+    """Drop-in replacement for attention.flash_attention on training paths."""
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+    kv_len = Sk if kv_len is None else kv_len
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    pq, pk = (-Sq) % bq, (-Sk) % bk
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq, nk = (Sq + pq) // bq, (Sk + pk) // bk
+    qb = qp.reshape(B, nq, bq, Hkv, G, D)
+    kb = kp.reshape(B, nk, bk, Hkv, D)
+    vb = vp.reshape(B, nk, bk, Hkv, D)
+    outs = _flash(qb, kb, vb, scale, causal, window, kv_len, q_offset,
+                  (bq, bk))
+    # (B, nq, Hkv, G, bq, D) -> (B, S, Hq, D)
+    out = outs.transpose(0, 1, 4, 2, 3, 5).reshape(B, nq * bq, Hkv * G, D)
+    return out[:, :Sq].astype(q.dtype)

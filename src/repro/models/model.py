@@ -1,0 +1,567 @@
+"""Model assembly: decoder LM over all six assigned families.
+
+Families:
+  dense / vlm / audio : L x [GQA attention + MLP]        (vlm/audio = stubs
+                        providing prefix/frame embeddings per the assignment)
+  moe                 : L x [GQA attention + MoE]
+  ssm                 : L x [Mamba-1]                     (attention-free)
+  hybrid              : L x [Mamba-2] + one *shared* attention+MLP block
+                        applied every ``shared_attn_every`` layers (Zamba2)
+
+Homogeneous layer stacks are parameter-stacked and executed with
+``lax.scan`` (+ optional ``jax.checkpoint`` remat) so the HLO stays compact
+for the 95-layer dry-run cells.  Decode is a single-token step against
+explicit caches (KV ring-buffers for sliding-window attention, conv+state
+carries for SSM).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import ssm
+from repro.models.attention import decode_attention, flash_attention
+from repro.models.flash_vjp import flash_attention_trainable
+from repro.models.layers import (dense_init, embed_apply, embed_init,
+                                 mlp_apply, mlp_init, rmsnorm, rmsnorm_init,
+                                 unembed_apply)
+from repro.models.moe import moe_apply, moe_init
+from repro.models.numerics import matmul
+from repro.parallel.sharding import (constrain_layer_params, shard,
+                                     tensor_size)
+
+
+def _pad_vocab(v: int, multiple: int = 256) -> int:
+    return ((v + multiple - 1) // multiple) * multiple
+
+
+# ---------------------------------------------------------------------------
+# Attention transformer block (dense / moe / vlm / audio; zamba shared block)
+# ---------------------------------------------------------------------------
+def attn_block_init(key, cfg: ArchConfig, dtype):
+    d, hd = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "ln1": rmsnorm_init(d, dtype),
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd, dtype),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d, dtype),
+        "ln2": rmsnorm_init(d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+    if cfg.family == "moe":
+        p["moe"] = moe_init(ks[4], d, n_experts=cfg.n_experts,
+                            moe_d_ff=cfg.moe_d_ff,
+                            n_shared=cfg.n_shared_experts, dtype=dtype)
+    else:
+        p["mlp"] = mlp_init(ks[4], d, cfg.d_ff, cfg.mlp_act, dtype)
+    return p
+
+
+def _qkv(p, h, cfg, positions, policy):
+    from repro.models.layers import apply_rope
+    B, S, _ = h.shape
+    q = matmul(h, p["wq"], policy)
+    k = matmul(h, p["wk"], policy)
+    v = matmul(h, p["wv"], policy)
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_style)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_style)
+    return q, k, v
+
+
+def _ffn(p, h2, cfg, policy):
+    if cfg.family == "moe":
+        from repro.parallel.sharding import active
+        ctx = active()
+        if ctx is not None and ctx.mesh.shape.get("data", 1) > 1:
+            from repro.models.moe_sharded import moe_apply_distributed
+            return moe_apply_distributed(
+                p["moe"], h2, top_k=cfg.experts_per_token,
+                capacity_factor=cfg.capacity_factor, ctx=ctx)
+        return moe_apply(p["moe"], h2, top_k=cfg.experts_per_token,
+                         capacity_factor=cfg.capacity_factor)
+    return mlp_apply(p["mlp"], h2, cfg.mlp_act, policy), {"aux_loss": 0.0}
+
+
+def attn_block_apply(p, x, positions, cfg: ArchConfig, *, policy=None,
+                     collect_kv: bool = False, triangle_skip: bool = False):
+    B, S, _ = x.shape
+    h = rmsnorm(p["ln1"], x)
+    q, k, v = _qkv(p, h, cfg, positions, policy)
+    # TP over heads: when Hkv doesn't divide the model axis but Hq does,
+    # repeat KV to full heads so attention compute/memory shards 16-way
+    # (the kv-repeat is free on TPU relative to replicating whole scores).
+    ts = tensor_size()
+    ka, va = k, v
+    if ts > 1 and cfg.n_kv_heads % ts and cfg.n_heads % ts == 0:
+        g = cfg.n_heads // cfg.n_kv_heads
+        ka = jnp.repeat(k, g, axis=2)
+        va = jnp.repeat(v, g, axis=2)
+    q = shard(q, "batch", None, "tensor", None)
+    ka = shard(ka, "batch", None, "tensor", None)
+    va = shard(va, "batch", None, "tensor", None)
+    if triangle_skip:
+        attn = flash_attention(q, ka, va, causal=True, window=cfg.window,
+                               triangle_skip=True)
+    else:
+        attn = flash_attention_trainable(q, ka, va, causal=True,
+                                         window=cfg.window)
+    x = x + matmul(attn.reshape(B, S, -1), p["wo"], policy)
+    h2 = rmsnorm(p["ln2"], x)
+    ff, aux = _ffn(p, h2, cfg, policy)
+    out = x + ff
+    # Megatron-SP: residual stream sequence-sharded over the model axis
+    # between blocks (psum -> reduce-scatter; remat carries shard 16x).
+    out = shard(out, "batch", "tensor", None)
+    if collect_kv:
+        cdt = jnp.dtype(cfg.kv_cache_dtype or cfg.dtype)
+        return out, aux, (k.astype(cdt), v.astype(cdt))
+    return out, aux
+
+
+def attn_block_decode(p, x, k_cache, v_cache, cache_len, cfg: ArchConfig, *,
+                      ring: bool = False, policy=None):
+    """x: (B,1,d); caches (B,Smax,Hkv,D); cache_len: current count (before
+    this token).  Returns (out, new_k, new_v)."""
+    B = x.shape[0]
+    Smax = k_cache.shape[1]
+    h = rmsnorm(p["ln1"], x)
+    cl = jnp.asarray(cache_len)
+    per_batch = cl.ndim == 1  # continuous batching: each slot has its own len
+    positions = (cl if per_batch else jnp.full((B,), cl))[:, None]
+    q, k, v = _qkv(p, h, cfg, positions, policy)
+    write_idx = (cl % Smax) if ring else cl
+    if per_batch:
+        k_cache = k_cache.at[jnp.arange(B), write_idx].set(
+            k[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[jnp.arange(B), write_idx].set(
+            v[:, 0].astype(v_cache.dtype))
+    else:
+        k_cache = lax.dynamic_update_slice_in_dim(
+            k_cache, k.astype(k_cache.dtype), write_idx, axis=1)
+        v_cache = lax.dynamic_update_slice_in_dim(
+            v_cache, v.astype(v_cache.dtype), write_idx, axis=1)
+    valid = jnp.minimum(cl + 1, Smax)
+    # window semantics: a ring cache IS the window (attention is permutation
+    # invariant over KV), so no extra window mask is needed when ring=True.
+    attn = decode_attention(q, k_cache, v_cache, valid,
+                            window=0 if ring else cfg.window)
+    x = x + matmul(attn.reshape(B, 1, -1), p["wo"], policy)
+    h2 = rmsnorm(p["ln2"], x)
+    ff, _ = _ffn(p, h2, cfg, policy)
+    return x + ff, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# SSM block (norm + mamba)
+# ---------------------------------------------------------------------------
+def ssm_block_init(key, cfg: ArchConfig, dtype):
+    d = cfg.d_model
+    p = {"ln": rmsnorm_init(d, dtype)}
+    if cfg.ssm_version == 1:
+        p["mamba"] = ssm.mamba1_init(key, d, d_state=cfg.ssm_state,
+                                     expand=cfg.ssm_expand, conv=cfg.ssm_conv,
+                                     dtype=dtype)
+    else:
+        p["mamba"] = ssm.mamba2_init(key, d, d_state=cfg.ssm_state,
+                                     expand=cfg.ssm_expand, conv=cfg.ssm_conv,
+                                     head_dim=cfg.ssm_head_dim, dtype=dtype)
+    return p
+
+
+def ssm_block_apply(p, x, cfg: ArchConfig, state=None, return_state=False):
+    h = rmsnorm(p["ln"], x)
+    kw = dict(state=state, return_state=return_state)
+    if cfg.ssm_version == 1:
+        out = ssm.mamba1_apply(p["mamba"], h, d_state=cfg.ssm_state, **kw)
+    else:
+        out = ssm.mamba2_apply(p["mamba"], h, d_state=cfg.ssm_state,
+                               head_dim=cfg.ssm_head_dim, **kw)
+    if return_state:
+        y, new_state = out
+        return shard(x + y, "batch", "tensor", None), new_state
+    return shard(x + out, "batch", "tensor", None)
+
+
+# ---------------------------------------------------------------------------
+# The LM
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class DecodeCache:
+    """Pytree container for decode state (registered below)."""
+
+    data: Dict
+    length: jnp.ndarray  # scalar int32
+
+    def tree_flatten(self):
+        return (self.data, self.length), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    DecodeCache, lambda c: c.tree_flatten(),
+    lambda aux, ch: DecodeCache(*ch))
+
+
+class LM:
+    """Functional decoder LM for one ArchConfig."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.vocab_padded = _pad_vocab(cfg.vocab_size)
+        self.dtype = jnp.dtype(cfg.dtype)
+
+    # ------------------------------------------------------------- init ----
+    def init(self, key) -> Dict:
+        cfg, dtype = self.cfg, self.dtype
+        ks = jax.random.split(key, 4)
+        params: Dict = {
+            "embed": embed_init(ks[0], self.vocab_padded, cfg.d_model, dtype),
+            "final_norm": rmsnorm_init(cfg.d_model, dtype),
+        }
+        if cfg.family in ("dense", "moe", "vlm", "audio"):
+            keys = jax.random.split(ks[1], cfg.n_layers)
+            params["layers"] = jax.vmap(
+                lambda k: attn_block_init(k, cfg, dtype))(keys)
+        elif cfg.family == "ssm":
+            keys = jax.random.split(ks[1], cfg.n_layers)
+            params["layers"] = jax.vmap(
+                lambda k: ssm_block_init(k, cfg, dtype))(keys)
+        elif cfg.family == "hybrid":
+            keys = jax.random.split(ks[1], cfg.n_layers)
+            params["layers"] = jax.vmap(
+                lambda k: ssm_block_init(k, cfg, dtype))(keys)
+            params["shared_attn"] = attn_block_init(ks[2], cfg, dtype)
+        else:
+            raise ValueError(cfg.family)
+        return params
+
+    # ------------------------------------------------------- segments ------
+    def _segments(self):
+        """Hybrid: [(start, end, apply_shared_after), ...]."""
+        cfg = self.cfg
+        if cfg.family != "hybrid":
+            return [(0, cfg.n_layers, False)]
+        every = cfg.shared_attn_every
+        segs = []
+        start = 0
+        while start < cfg.n_layers:
+            end = min(start + every, cfg.n_layers)
+            segs.append((start, end, end - start == every))
+            start = end
+        return segs
+
+    @property
+    def n_shared_applications(self) -> int:
+        return sum(1 for _, _, s in self._segments() if s)
+
+    # ------------------------------------------------------- forward -------
+    def _embed_inputs(self, params, tokens, prefix_embeds, frame_embeds):
+        cfg = self.cfg
+        if frame_embeds is not None:
+            x = frame_embeds.astype(self.dtype)
+        else:
+            x = embed_apply(params["embed"], tokens)
+        if prefix_embeds is not None:
+            x = jnp.concatenate([prefix_embeds.astype(self.dtype), x], axis=1)
+        return shard(x, "batch", None, None)
+
+    def apply(self, params, tokens=None, *, prefix_embeds=None,
+              frame_embeds=None, policy=None, collect_kv: bool = False,
+              triangle_skip: bool = False, logits_last_only: bool = False):
+        """Full-sequence forward. Returns (logits, aux, kv or None).
+
+        logits_last_only: unembed only the final position (prefill path —
+        avoids materializing (B,S,V) f32 logits for 32k prompts)."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, tokens, prefix_embeds, frame_embeds)
+        B, S, _ = x.shape
+        positions = jnp.arange(S)[None, :]
+        aux_total = 0.0
+        kv_out = []
+
+        if cfg.family in ("dense", "moe", "vlm", "audio"):
+            x, aux_total, kv = self._attn_stack(
+                params["layers"], x, positions, policy, collect_kv,
+                triangle_skip)
+            if collect_kv:
+                kv_out.append(kv)
+        elif cfg.family == "ssm":
+            x = self._ssm_stack(params["layers"], x)
+        else:  # hybrid
+            for (s, e, shared) in self._segments():
+                seg = jax.tree.map(lambda a: a[s:e], params["layers"])
+                x = self._ssm_stack(seg, x)
+                if shared:
+                    out = attn_block_apply(
+                        params["shared_attn"], x, positions, cfg,
+                        policy=policy, collect_kv=collect_kv,
+                        triangle_skip=triangle_skip)
+                    if collect_kv:
+                        x, aux, kv = out
+                        kv_out.append((kv[0][None], kv[1][None]))
+                    else:
+                        x, aux = out
+
+        x = rmsnorm(params["final_norm"], x)
+        if logits_last_only:
+            x = x[:, -1:]
+        logits = unembed_apply(params["embed"], x, policy)
+        logits = shard(logits, "batch", None, "tensor")
+        if collect_kv:
+            if cfg.family == "hybrid" and kv_out:
+                kv_out = (jnp.concatenate([k for k, _ in kv_out], 0),
+                          jnp.concatenate([v for _, v in kv_out], 0))
+            elif kv_out:
+                kv_out = kv_out[0]
+            return logits, aux_total, kv_out
+        return logits, aux_total
+
+    def _attn_stack(self, layers, x, positions, policy, collect_kv,
+                    triangle_skip):
+        cfg = self.cfg
+
+        def body(carry, lp):
+            x, aux = carry
+            lp = constrain_layer_params(lp, cfg.n_experts)
+            if collect_kv:
+                y, a, kv = attn_block_apply(lp, x, positions, cfg,
+                                            policy=policy, collect_kv=True,
+                                            triangle_skip=triangle_skip)
+                return (y, aux + a["aux_loss"]), kv
+            y, a = attn_block_apply(lp, x, positions, cfg, policy=policy,
+                                    triangle_skip=triangle_skip)
+            return (y, aux + a["aux_loss"]), None
+
+        fn = jax.checkpoint(body) if cfg.remat else body
+        (x, aux), kv = lax.scan(fn, (x, jnp.float32(0.0)), layers)
+        return x, aux, kv
+
+    def _ssm_stack(self, layers, x):
+        cfg = self.cfg
+
+        def body(x, lp):
+            lp = constrain_layer_params(lp, cfg.n_experts)
+            return ssm_block_apply(lp, x, cfg), None
+
+        fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = lax.scan(fn, x, layers)
+        return x
+
+    # --------------------------------------------------------- loss --------
+    def loss_fn(self, params, batch, *, policy=None):
+        """batch: tokens/labels (+prefix_embeds | frame_embeds).
+        labels < 0 are masked."""
+        cfg = self.cfg
+        logits, aux = self.apply(
+            params, batch.get("tokens"),
+            prefix_embeds=batch.get("prefix_embeds"),
+            frame_embeds=batch.get("frame_embeds"), policy=policy)
+        labels = batch["labels"]
+        # vlm prefix positions produce logits we do not score
+        if logits.shape[1] != labels.shape[1]:
+            logits = logits[:, logits.shape[1] - labels.shape[1]:]
+        mask = (labels >= 0).astype(jnp.float32)
+        safe = jnp.maximum(labels, 0)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+        denom = jnp.maximum(mask.sum(), 1.0)
+        ce = -(ll * mask).sum() / denom
+        # z-loss stabilizer (production training trick)
+        zl = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2
+                      * mask) * 1e-4
+        loss = ce + zl + 0.01 * aux
+        return loss, {"ce": ce, "z_loss": zl, "aux_loss": aux,
+                      "tokens": denom}
+
+    # -------------------------------------------------------- caches -------
+    @property
+    def cache_dtype(self):
+        return jnp.dtype(self.cfg.kv_cache_dtype or self.cfg.dtype)
+
+    def init_cache(self, batch: int, max_len: int) -> DecodeCache:
+        cfg, dtype = self.cfg, self.cache_dtype
+        data: Dict = {}
+        if cfg.family in ("dense", "moe", "vlm", "audio"):
+            smax = min(max_len, cfg.window) if cfg.window else max_len
+            shp = (cfg.n_layers, batch, smax, cfg.n_kv_heads, cfg.head_dim)
+            data["k"] = jnp.zeros(shp, dtype)
+            data["v"] = jnp.zeros(shp, dtype)
+        if cfg.family in ("ssm", "hybrid"):
+            conv_s, h_s = ssm.mamba_state_shapes(cfg, batch)
+            L = cfg.n_layers
+            data["conv"] = jnp.zeros((L,) + conv_s.shape, conv_s.dtype)
+            data["h"] = jnp.zeros((L,) + h_s.shape, h_s.dtype)
+        if cfg.family == "hybrid":
+            napp = self.n_shared_applications
+            shp = (napp, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+            data["k"] = jnp.zeros(shp, self.cache_dtype)
+            data["v"] = jnp.zeros(shp, self.cache_dtype)
+        return DecodeCache(data, jnp.int32(0))
+
+    def cache_at_length(self, cache: DecodeCache, length) -> DecodeCache:
+        return DecodeCache(cache.data, jnp.int32(length))
+
+    # -------------------------------------------------------- decode -------
+    def decode_step(self, params, cache: DecodeCache, tokens, *, policy=None):
+        """tokens: (B,1) -> (logits (B,1,V), new cache)."""
+        cfg = self.cfg
+        x = embed_apply(params["embed"], tokens)
+        x = shard(x, "batch", None, None)
+        L = cfg.n_layers
+        ring = bool(cfg.window)
+        clen = cache.length
+        data = dict(cache.data)
+
+        if cfg.family in ("dense", "moe", "vlm", "audio"):
+
+            def body(x, inp):
+                lp, kc, vc = inp
+                y, kc2, vc2 = attn_block_decode(lp, x, kc, vc, clen, cfg,
+                                                ring=ring, policy=policy)
+                return y, (kc2, vc2)
+
+            x, (k2, v2) = lax.scan(body, x,
+                                   (params["layers"], data["k"], data["v"]))
+            data["k"], data["v"] = k2, v2
+        elif cfg.family == "ssm":
+
+            def body(x, inp):
+                lp, conv, h = inp
+                y, (conv2, h2) = ssm_block_apply(lp, x, cfg,
+                                                 state=(conv, h),
+                                                 return_state=True)
+                return y, (conv2, h2)
+
+            x, (c2, h2) = lax.scan(body, x,
+                                   (params["layers"], data["conv"], data["h"]))
+            data["conv"], data["h"] = c2, h2
+        else:  # hybrid
+            new_conv, new_h = [], []
+            app_idx = 0
+            k_apps, v_apps = [], []
+            for (s, e, shared) in self._segments():
+                seg = jax.tree.map(lambda a: a[s:e], params["layers"])
+                conv_seg = data["conv"][s:e]
+                h_seg = data["h"][s:e]
+
+                def body(x, inp):
+                    lp, conv, h = inp
+                    y, (conv2, h2) = ssm_block_apply(lp, x, cfg,
+                                                     state=(conv, h),
+                                                     return_state=True)
+                    return y, (conv2, h2)
+
+                x, (c2, h2) = lax.scan(body, x, (seg, conv_seg, h_seg))
+                new_conv.append(c2)
+                new_h.append(h2)
+                if shared:
+                    y, kc2, vc2 = attn_block_decode(
+                        params["shared_attn"], x, data["k"][app_idx],
+                        data["v"][app_idx], clen, cfg, ring=False,
+                        policy=policy)
+                    x = y
+                    k_apps.append(kc2)
+                    v_apps.append(vc2)
+                    app_idx += 1
+            data["conv"] = jnp.concatenate(new_conv, 0)
+            data["h"] = jnp.concatenate(new_h, 0)
+            if k_apps:
+                data["k"] = jnp.stack(k_apps, 0)
+                data["v"] = jnp.stack(v_apps, 0)
+
+        x = rmsnorm(params["final_norm"], x)
+        logits = unembed_apply(params["embed"], x, policy)
+        logits = shard(logits, "batch", None, "tensor")
+        return logits, DecodeCache(data, clen + 1)
+
+    # -------------------------------------------------------- prefill ------
+    def prefill(self, params, tokens=None, *, prefix_embeds=None,
+                frame_embeds=None, max_len: Optional[int] = None,
+                policy=None):
+        """Run the full prompt, build a decode cache. Returns
+        (last_logits (B,V), cache)."""
+        cfg = self.cfg
+        out = self.apply(params, tokens, prefix_embeds=prefix_embeds,
+                         frame_embeds=frame_embeds, policy=policy,
+                         collect_kv=cfg.family != "ssm",
+                         logits_last_only=True)
+        if cfg.family == "ssm":
+            (logits, _), kv = out, None
+        else:
+            logits, _, kv = out
+        if tokens is not None:
+            B, S = tokens.shape
+        else:
+            B, S = frame_embeds.shape[:2]
+        if prefix_embeds is not None:
+            S += prefix_embeds.shape[1]
+        max_len = max_len or S
+        cache = self.init_cache(B, max_len)
+        data = dict(cache.data)
+        if cfg.family != "ssm" and kv:
+            k, v = kv  # (L_or_apps, B, S, Hkv, D)
+            smax = data["k"].shape[2]
+            cdt = self.cache_dtype
+            if smax >= S:
+                # pad to max_len in one shot (no zero-buffer + copy)
+                pad = [(0, 0), (0, 0), (0, smax - S), (0, 0), (0, 0)]
+                data["k"] = jnp.pad(k.astype(cdt), pad)
+                data["v"] = jnp.pad(v.astype(cdt), pad)
+            else:  # sliding window: keep the tail, ring-aligned so that
+                # position p sits at slot p % smax (decode writes there).
+                shift = S % smax
+                data["k"] = jnp.roll(k[:, :, S - smax:].astype(cdt),
+                                     shift, axis=2)
+                data["v"] = jnp.roll(v[:, :, S - smax:].astype(cdt),
+                                     shift, axis=2)
+        if cfg.family in ("ssm", "hybrid"):
+            data["conv"], data["h"] = self._prefill_ssm_states(
+                params, tokens, prefix_embeds, frame_embeds)
+        return logits[:, -1], DecodeCache(data, jnp.int32(S))
+
+    def _prefill_ssm_states(self, params, tokens, prefix_embeds,
+                            frame_embeds):
+        """Stateful stack forward (scan-based, one layer's working set live)
+        harvesting the per-layer conv/h decode states."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, tokens, prefix_embeds, frame_embeds)
+        positions = jnp.arange(x.shape[1])[None, :]
+        layers = params["layers"]
+
+        def body(x, lp):
+            lp = constrain_layer_params(lp, cfg.n_experts)
+            y, st = ssm_block_apply(lp, x, cfg, state=None, return_state=True)
+            return y, st
+
+        if cfg.family == "ssm":
+            _, (convs, hs) = lax.scan(body, x, layers)
+            return convs, hs
+        convs_l, hs_l = [], []
+        for (s, e, shared) in self._segments():
+            seg = jax.tree.map(lambda a: a[s:e], layers)
+            x, (conv, h) = lax.scan(body, x, seg)
+            convs_l.append(conv)
+            hs_l.append(h)
+            if shared:
+                x, _ = attn_block_apply(params["shared_attn"], x, positions,
+                                        cfg)
+        return jnp.concatenate(convs_l, 0), jnp.concatenate(hs_l, 0)

@@ -1,0 +1,116 @@
+"""Mixture-of-Experts layer: deterministic top-k routing with sort-based
+capacity dispatch (Switch/GShard-style, but scatter/gather instead of the
+O(T*E*C) one-hot einsum so the dry-run memory stays realistic).
+
+Supports both assigned MoE architectures:
+  * deepseek-moe-16b: 2 shared (always-on) + 64 routed top-6 fine-grained
+  * mixtral-8x7b:     8 routed top-2, no shared experts
+
+Expert parallelism: expert-major tensors (E, ...) carry sharding constraints
+from parallel/sharding.py — E divisible by the model axis uses EP (all-to-all
+dispatch); otherwise expert weights shard their ffn dim over the model axis
+(TP-MoE, the standard Mixtral deployment).  Constraints are applied by the
+model assembly, not here.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def moe_init(key, d: int, *, n_experts: int, moe_d_ff: int,
+             n_shared: int, dtype) -> Dict:
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], d, n_experts, jnp.float32, scale=0.02),
+        "w_gate": (jax.random.normal(ks[1], (n_experts, d, moe_d_ff),
+                                     jnp.float32) * d ** -0.5).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (n_experts, d, moe_d_ff),
+                                   jnp.float32) * d ** -0.5).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (n_experts, moe_d_ff, d),
+                                     jnp.float32) * moe_d_ff ** -0.5
+                   ).astype(dtype),
+    }
+    if n_shared:
+        dff_sh = n_shared * moe_d_ff
+        kss = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(kss[0], d, dff_sh, dtype),
+            "w_up": dense_init(kss[1], d, dff_sh, dtype),
+            "w_down": dense_init(kss[2], dff_sh, d, dtype),
+        }
+    return p
+
+
+def _expert_ffn(p, xbuf):
+    """xbuf: (E, C, d) -> (E, C, d), swiglu per expert."""
+    g = jnp.einsum("ecd,edf->ecf", xbuf, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xbuf, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(xbuf.dtype) * u
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+
+
+def moe_apply(p, x, *, top_k: int, capacity_factor: float = 1.25,
+              shard_fn=None) -> Tuple[jnp.ndarray, Dict]:
+    """x: (B,S,d). Returns (out, aux) with load-balance loss in aux."""
+    B, S, d = x.shape
+    E = p["router"].shape[1]
+    T = B * S
+    xf = x.reshape(T, d)
+    shard_fn = shard_fn or (lambda t, kind: t)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, top_k)  # (T, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    # ---- load-balancing aux loss (Switch-style) ----
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top_i[:, 0], E, dtype=jnp.float32), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux_loss = E * jnp.sum(frac_tokens * frac_probs)
+
+    # ---- sort-based capacity dispatch ----
+    cap = int(capacity_factor * T * top_k / E)
+    cap = max(cap, 4)
+    if cap >= 128:
+        cap = ((cap + 127) // 128) * 128  # MXU-friendly at scale
+    cap = min(cap, T * top_k)
+    e_flat = top_i.reshape(-1)  # (T*k,)
+    w_flat = top_w.reshape(-1)
+    tok_flat = jnp.arange(T * top_k) // top_k
+    order = jnp.argsort(e_flat)
+    e_sorted = e_flat[order]
+    starts = jnp.searchsorted(e_sorted, jnp.arange(E), side="left")
+    pos = jnp.arange(T * top_k) - starts[e_sorted]
+    keep = pos < cap
+    slot = e_sorted * cap + jnp.clip(pos, 0, cap - 1)  # (T*k,)
+    tok_sorted = tok_flat[order]
+
+    xbuf = jnp.zeros((E * cap, d), x.dtype)
+    gathered = xf[tok_sorted] * keep[:, None].astype(x.dtype)
+    xbuf = xbuf.at[slot].add(gathered)
+    xbuf = shard_fn(xbuf.reshape(E, cap, d), "expert_buffer")
+
+    ybuf = _expert_ffn(p, xbuf).reshape(E * cap, d)
+
+    w_sorted = w_flat[order]
+    y_slot = ybuf[slot] * (keep.astype(jnp.float32)
+                           * w_sorted)[:, None].astype(x.dtype)
+    y = jnp.zeros((T, d), x.dtype).at[tok_sorted].add(y_slot)
+    out = y.reshape(B, S, d)
+
+    if "shared" in p:
+        sp = p["shared"]
+        g = xf @ sp["w_gate"]
+        u = xf @ sp["w_up"]
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        out = out + (h @ sp["w_down"]).reshape(B, S, d)
+
+    dropped = jnp.sum(1.0 - keep.astype(jnp.float32)) / (T * top_k)
+    return out, {"aux_loss": aux_loss, "dropped_frac": dropped}

@@ -1,0 +1,37 @@
+"""Numerics-policy-aware matmul: where the FPMax technique meets the models.
+
+Full-scale dry-run cells run native bf16/f32 einsums (the TPU MXU path whose
+roofline we analyze).  Smoke-scale and numerics-study runs route through the
+fma_emu Pallas kernel semantics, so any generated FPU format/accumulation
+style can be evaluated end-to-end on a real model.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.formats import get_format
+from repro.kernels.ops import emulated_matmul
+
+
+def matmul(x, w, policy=None):
+    """x: (..., K) @ w: (K, N) under an optional NumericsPolicy."""
+    if policy is None or not getattr(policy, "emulate", False):
+        return jnp.matmul(x, w)
+    fmt = policy.fmt if not isinstance(policy.fmt, str) else get_format(policy.fmt)
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    out = emulated_matmul(x2.astype(jnp.float32), w.astype(jnp.float32),
+                          fmt=fmt, style=policy.accum_style)
+    return out.reshape(lead + (w.shape[-1],)).astype(x.dtype)
+
+
+class EmulatedPolicy:
+    """Light adapter marking a NumericsPolicy as active for model matmuls."""
+
+    emulate = True
+
+    def __init__(self, fmt, accum_style: str):
+        self.fmt = fmt
+        self.accum_style = accum_style

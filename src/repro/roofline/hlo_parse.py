@@ -1,0 +1,351 @@
+"""Post-optimization HLO text analyzer with while-loop trip multiplication.
+
+XLA's ``compiled.cost_analysis()`` counts each computation ONCE — a scanned
+95-layer stack reports 1/95th of its flops.  This analyzer walks the HLO
+module text, recovers each while loop's trip count from its condition
+computation, and multiplies flops / HBM traffic / collective bytes through
+nested loops.  Fusion bodies are costed at their interface (operands +
+results of the ``fusion`` op), matching XLA's own traffic model.
+
+Coverage: dot (flops via contracting dims), convolution (via kernel size),
+every instruction's result bytes + operand bytes for traffic (top-level and
+loop bodies only), and the five collective op kinds for the collective term.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_TOKEN = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{\s*$")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OPCODE = re.compile(r"^\s*(?:\([^=]*\)|[a-z0-9_\[\],{}\s]*?)?\s*([a-z][a-z0-9\-]*)\(")
+_CALLS = re.compile(r"(?:calls|body|condition|branch_computations|to_apply)="
+                    r"[%]?([\w.\-{}, %]+)")
+_CONSTANT_INT = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_TOKEN.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _result_type_region(rhs: str) -> str:
+    """The result type prefix of an instruction RHS (possibly a tuple)."""
+    rhs = rhs.strip()
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return rhs[:i + 1]
+        return rhs
+    m = re.match(r"^[a-z0-9]+\[[0-9,]*\](?:{[^}]*})?", rhs)
+    return m.group(0) if m else ""
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    rhs: str
+    result_bytes: int
+    flops: float
+    calls: List[str]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    result_types: Dict[str, str]
+
+
+def _dot_flops(rhs: str, result_types: Dict[str, str]) -> float:
+    """2 * prod(result dims) * prod(contracting dims of lhs)."""
+    res_region = _result_type_region(rhs)
+    m = _SHAPE_TOKEN.search(res_region)
+    if not m:
+        return 0.0
+    out_elems = 1
+    for d in m.group(2).split(","):
+        if d:
+            out_elems *= int(d)
+    # operands
+    ops = re.search(r"\(([^)]*)\)", rhs[len(res_region):])
+    if not ops:
+        return 0.0
+    operands = [o.strip().lstrip("%") for o in ops.group(1).split(",")]
+    lhs_type = result_types.get(operands[0], "") if operands else ""
+    ml = _SHAPE_TOKEN.search(lhs_type)
+    if not ml:
+        return 0.0
+    lhs_dims = [int(d) for d in ml.group(2).split(",") if d]
+    cdims = re.search(r"lhs_contracting_dims={([\d,]*)}", rhs)
+    k = 1
+    if cdims:
+        for idx in cdims.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                k *= lhs_dims[int(idx)]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(rhs: str, result_types: Dict[str, str]) -> float:
+    res_region = _result_type_region(rhs)
+    m = _SHAPE_TOKEN.search(res_region)
+    if not m:
+        return 0.0
+    out_elems = 1
+    for d in m.group(2).split(","):
+        if d:
+            out_elems *= int(d)
+    ops = re.search(r"\(([^)]*)\)", rhs[len(res_region):])
+    if not ops:
+        return 0.0
+    operands = [o.strip().lstrip("%") for o in ops.group(1).split(",")]
+    if len(operands) < 2:
+        return 0.0
+    ker_type = result_types.get(operands[1], "")
+    mk = _SHAPE_TOKEN.search(ker_type)
+    if not mk:
+        return 0.0
+    ker = [int(d) for d in mk.group(2).split(",") if d]
+    feat = re.search(r"feature_group_count=(\d+)", rhs)
+    groups = int(feat.group(1)) if feat else 1
+    ker_elems = 1
+    for d in ker:
+        ker_elems *= d
+    # per output element: ker_elems / out_features MACs (x2 flops)
+    out_features = ker[-1] if ker else 1
+    return 2.0 * out_elems * (ker_elems / max(out_features, 1)) / max(groups, 1) * groups
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if line.endswith("{") and ("->" in line or line.startswith("ENTRY")):
+            h = _COMP_HEADER.match(line.strip())
+            if h:
+                cur = Computation(h.group(1), [], {})
+                comps[cur.name] = cur
+                continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR.match(line)
+        if not mi:
+            continue
+        name, rhs = mi.group(1), mi.group(2)
+        res_region = _result_type_region(rhs)
+        cur.result_types[name] = res_region
+        opm = _OPCODE.search(rhs[len(res_region):])
+        opcode = opm.group(1) if opm else ""
+        calls = []
+        for cm in _CALLS.finditer(rhs):
+            for c in re.split(r"[,{}]", cm.group(1)):
+                c = c.strip().lstrip("%")
+                if c:
+                    calls.append(c)
+        flops = 0.0
+        if opcode == "dot":
+            flops = _dot_flops(rhs, cur.result_types)
+        elif opcode == "convolution":
+            flops = _conv_flops(rhs, cur.result_types)
+        cur.instrs.append(Instr(name, opcode, rhs,
+                                _shape_bytes(res_region), flops, calls))
+    return comps
+
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    traffic_bytes: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+
+    def add(self, other: "HloCost", times: float = 1.0):
+        self.flops += other.flops * times
+        self.traffic_bytes += other.traffic_bytes * times
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] = self.collective_bytes.get(k, 0) \
+                + v * times
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def _trip_count(cond: Computation) -> float:
+    """Recover scan trip count from the condition computation.
+
+    XLA lowers lax.scan conditions to `iter < constant(N)`; the compare may
+    be wrapped in a kLoop fusion, so we take the max s32[] constant in the
+    condition computation (scan trip counts are the only integer constants
+    there)."""
+    best = None
+    for ins in cond.instrs:
+        if "s32[]" in ins.rhs:
+            mc = _CONSTANT_INT.search(ins.rhs)
+            if mc:
+                v = int(mc.group(1))
+                best = v if best is None else max(best, v)
+    return float(best) if best else 1.0
+
+
+def _fusion_called(comps: Dict[str, Computation]) -> set:
+    """Computations whose cost is subsumed by their caller's interface."""
+    sub = set()
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.opcode in ("fusion", "reduce", "map", "sort", "scatter",
+                              "reduce-window", "select-and-scatter", "custom-call"):
+                sub.update(ins.calls)
+    return sub
+
+
+def _update_operand_bytes(ins: Instr, comp: Computation) -> int:
+    """Bytes of the update (2nd) operand of a dynamic-update-slice."""
+    rhs_after = ins.rhs[len(_result_type_region(ins.rhs)):]
+    ops = re.search(r"\(([^)]*)\)", rhs_after)
+    if not ops:
+        return 0
+    names = [o.strip().lstrip("%") for o in ops.group(1).split(",")]
+    if len(names) >= 2 and names[1] in comp.result_types:
+        return _shape_bytes(comp.result_types[names[1]])
+    return 0
+
+
+def _operand_bytes(ins: Instr, comp: Computation) -> int:
+    rhs_after = ins.rhs[len(_result_type_region(ins.rhs)):]
+    ops = re.search(r"\(([^)]*)\)", rhs_after)
+    if not ops:
+        return 0
+    total = 0
+    for o in ops.group(1).split(","):
+        o = o.strip().lstrip("%")
+        if o in comp.result_types:
+            total += _shape_bytes(comp.result_types[o])
+    return total
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps = parse_module(text)
+    subsumed = _fusion_called(comps)
+    memo: Dict[str, HloCost] = {}
+
+    # map computation -> called-by-while relationships handled via recursion
+    def cost_of(comp_name: str) -> HloCost:
+        if comp_name in memo:
+            return memo[comp_name]
+        comp = comps.get(comp_name)
+        total = HloCost()
+        if comp is None:
+            return total
+        memo[comp_name] = total  # guard cycles
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                body = cond = None
+                mb = re.search(r"body=%?([\w.\-]+)", ins.rhs)
+                mc = re.search(r"condition=%?([\w.\-]+)", ins.rhs)
+                if mb:
+                    body = mb.group(1)
+                if mc:
+                    cond = mc.group(1)
+                trips = _trip_count(comps[cond]) if cond in comps else 1.0
+                if body:
+                    total.add(cost_of(body), trips)
+                continue
+            if ins.opcode in ("call", "conditional"):
+                for c in ins.calls:
+                    total.add(cost_of(c), 1.0)
+                continue
+            total.flops += ins.flops
+            if ins.opcode in ("parameter", "constant", "get-tuple-element",
+                              "tuple", "bitcast"):
+                pass
+            elif ins.opcode == "dynamic-slice":
+                # reads only the sliced region (result-sized)
+                total.traffic_bytes += 2 * ins.result_bytes
+            elif ins.opcode == "dynamic-update-slice":
+                # aliases the big operand; traffic = update region r/w
+                upd = _update_operand_bytes(ins, comp)
+                total.traffic_bytes += 2 * upd
+            else:
+                total.traffic_bytes += ins.result_bytes \
+                    + _operand_bytes(ins, comp)
+            for kind in _COLLECTIVES:
+                if ins.opcode == kind or ins.opcode == kind + "-start":
+                    b = ins.result_bytes
+                    total.collective_bytes[kind] = \
+                        total.collective_bytes.get(kind, 0) + b
+            # fusion-called computations' dots still do flops:
+            if ins.opcode == "fusion":
+                for c in ins.calls:
+                    sub = cost_of_fused(c)
+                    total.flops += sub
+        return total
+
+    fused_memo: Dict[str, float] = {}
+
+    def cost_of_fused(comp_name: str) -> float:
+        """flops inside fusion bodies (traffic excluded by design)."""
+        if comp_name in fused_memo:
+            return fused_memo[comp_name]
+        comp = comps.get(comp_name)
+        f = 0.0
+        if comp:
+            for ins in comp.instrs:
+                f += ins.flops
+                for c in ins.calls:
+                    if c in subsumed:
+                        f += cost_of_fused(c)
+        fused_memo[comp_name] = f
+        return f
+
+    entry = None
+    for name, comp in comps.items():
+        if name.startswith("main") or entry is None:
+            entry = name
+    # find the ENTRY computation: it is the one not called by anything
+    called = set()
+    for comp in comps.values():
+        for ins in comp.instrs:
+            called.update(ins.calls)
+            for m in re.finditer(r"body=%?([\w.\-]+)|condition=%?([\w.\-]+)",
+                                 ins.rhs):
+                called.update(x for x in m.groups() if x)
+    roots = [n for n in comps if n not in called and n not in subsumed]
+    total = HloCost()
+    for r in roots:
+        total.add(cost_of(r), 1.0)
+    return total

@@ -1,0 +1,173 @@
+"""Checkpointing: atomic, keep-K, async save thread, and *resharding
+restore* (load a checkpoint saved under any mesh into any other mesh —
+elastic scale-up/down across restarts).
+
+Layout:  <dir>/step_<N>/ manifest.json + leaf_<i>.npy (one file per pytree
+leaf; full logical arrays — on a real multi-host pod each host writes its
+shard files; the manifest format already records per-leaf shapes/dtypes so
+the loader is layout-agnostic).
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# numpy can't round-trip ml_dtypes (bf16/fp8) through np.save: store them as
+# same-width unsigned views and restore from the manifest dtype
+_VIEW_DTYPES = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+                "float8_e5m2": np.uint8, "float8_e4m3": np.uint8}
+
+
+def _to_savable(arr: np.ndarray):
+    name = str(arr.dtype)
+    if name in _VIEW_DTYPES:
+        return arr.view(_VIEW_DTYPES[name]), name
+    return arr, name
+
+
+def _from_saved(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _VIEW_DTYPES:
+        import ml_dtypes
+        return arr.view(getattr(ml_dtypes, dtype_name))
+    return arr
+
+
+def _tree_paths(tree) -> List[str]:
+    paths = []
+
+    def rec(path, node):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                rec(path + (str(k),), node[k])
+        elif isinstance(node, (tuple, list)):
+            for i, v in enumerate(node):
+                rec(path + (str(i),), v)
+        else:
+            paths.append("/".join(path))
+
+    rec((), tree)
+    return paths
+
+
+def save_pytree(tree, directory: str, step: int, extra: Optional[dict] = None):
+    """Atomic checkpoint write: stage into tmp, rename."""
+    flat, treedef = jax.tree.flatten(tree)
+    tmp = os.path.join(directory, f".tmp_step_{step}")
+    final = os.path.join(directory, f"step_{step}")
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {
+        "step": step,
+        "n_leaves": len(flat),
+        "treedef": str(treedef),
+        "paths": _tree_paths(tree),
+        "shapes": [list(np.shape(l)) for l in flat],
+        "dtypes": [str(np.asarray(l).dtype) for l in flat],
+        "extra": extra or {},
+    }
+    for i, leaf in enumerate(flat):
+        arr, _ = _to_savable(np.asarray(jax.device_get(leaf)))
+        np.save(os.path.join(tmp, f"leaf_{i}.npy"), arr)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def load_pytree(directory: str, step: int, like=None, shardings=None):
+    """Load a checkpoint; ``shardings`` (matching pytree of NamedSharding)
+    reshards onto the *current* mesh — the elastic-restart path."""
+    d = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves = [_from_saved(np.load(os.path.join(d, f"leaf_{i}.npy")),
+                          manifest["dtypes"][i])
+              for i in range(manifest["n_leaves"])]
+    if like is None:
+        raise ValueError("load_pytree needs a `like` pytree for structure")
+    treedef = jax.tree.structure(like)
+    tree = treedef.unflatten(leaves)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda a, s: jax.device_put(a, s), tree, shardings)
+    else:
+        like_flat = jax.tree.leaves(like)
+        tree = treedef.unflatten([
+            jnp.asarray(a, dtype=l.dtype) for a, l in zip(leaves, like_flat)])
+    return tree, manifest
+
+
+class CheckpointManager:
+    """keep-K, async background save, latest-step discovery."""
+
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._async = async_save
+        self._q: "queue.Queue" = queue.Queue()
+        self._worker = None
+        if async_save:
+            self._worker = threading.Thread(target=self._drain, daemon=True)
+            self._worker.start()
+
+    # -- discovery ----------------------------------------------------------
+    def steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_"):
+                try:
+                    out.append(int(name.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    # -- save/restore -------------------------------------------------------
+    def save(self, step: int, tree, extra: Optional[dict] = None,
+             block: bool = False):
+        # device_get NOW (so training can donate/overwrite buffers), write
+        # in the background thread.
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        if self._async and not block:
+            self._q.put((step, host_tree, extra))
+        else:
+            save_pytree(host_tree, self.directory, step, extra)
+            self._gc()
+
+    def restore(self, like, step: Optional[int] = None, shardings=None):
+        step = self.latest_step() if step is None else step
+        if step is None:
+            return None, None
+        return load_pytree(self.directory, step, like=like,
+                           shardings=shardings)
+
+    def wait(self):
+        self._q.join()
+
+    def _drain(self):
+        while True:
+            step, tree, extra = self._q.get()
+            try:
+                save_pytree(tree, self.directory, step, extra)
+                self._gc()
+            finally:
+                self._q.task_done()
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s}"),
+                          ignore_errors=True)

@@ -1,0 +1,119 @@
+"""Train-step factory: loss + grad + AdamW update, with microbatched gradient
+accumulation (compute/comm overlap: per-microbatch collectives pipeline with
+the next microbatch's compute under XLA SPMD) and the FPMax per-step energy
+telemetry hook.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import LM
+from repro.train.optimizer import AdamState, AdamWConfig, apply_updates, init_state
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamState
+    step: jnp.ndarray
+
+
+def make_train_state(model: LM, key, opt_cfg: AdamWConfig) -> TrainState:
+    params = model.init(key)
+    return TrainState(params, init_state(params, opt_cfg),
+                      jnp.zeros((), jnp.int32))
+
+
+def make_train_step(model: LM, opt_cfg: AdamWConfig, *,
+                    microbatches: int = 1, policy=None,
+                    grad_shardings=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    microbatches > 1 splits the global batch on axis 0 and accumulates grads
+    with a lax.scan (remat-friendly; lets XLA overlap the per-layer TP
+    collectives of microbatch i+1 with the optimizer-free accumulation of i).
+
+    grad_shardings (pytree of NamedSharding matching params) pins the f32
+    gradient accumulator to the parameter layout — without it XLA may keep
+    the scan carry replicated and all-gather full weight grads every layer.
+    """
+
+    def _pin(tree):
+        if grad_shardings is None:
+            return tree
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s),
+            tree, grad_shardings)
+
+    def loss_fn(params, batch):
+        return model.loss_fn(params, batch, policy=policy)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single(params, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        return loss, metrics, _pin(grads)
+
+    def accumulate(params, batch):
+        def split(x):
+            return x.reshape((microbatches, x.shape[0] // microbatches)
+                             + x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def body(carry, mb):
+            acc, loss_acc = carry
+            (loss, _), grads = grad_fn(params, mb)
+            acc = _pin(jax.tree.map(jnp.add, acc, _pin(grads)))
+            return (acc, loss_acc + loss), None
+
+        zeros = _pin(jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+        (grads, loss_sum), _ = jax.lax.scan(body, (zeros, jnp.float32(0)),
+                                            micro)
+        grads = jax.tree.map(lambda g: g / microbatches, grads)
+        return loss_sum / microbatches, {}, grads
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        if microbatches > 1:
+            loss, metrics, grads = accumulate(state.params, batch)
+        else:
+            loss, metrics, grads = single(state.params, batch)
+        params, opt, opt_metrics = apply_updates(state.params, grads,
+                                                 state.opt, opt_cfg)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return TrainState(params, opt, state.step + 1), metrics
+
+    return train_step
+
+
+def train_loop(model: LM, state: TrainState, train_step, data_iter, *,
+               n_steps: int, log_every: int = 10,
+               checkpoint_manager=None, checkpoint_every: int = 0,
+               telemetry=None, failure_hook=None):
+    """Simple host loop used by examples and the fault-tolerance tests."""
+    history = []
+    step0 = int(state.step)
+    jitted = jax.jit(train_step, donate_argnums=(0,))
+    for i in range(step0, n_steps):
+        if failure_hook is not None:
+            failure_hook(i)
+        batch = data_iter(i)
+        state, metrics = jitted(state, batch)
+        if (i + 1) % log_every == 0 or i + 1 == n_steps:
+            row = {k: float(v) for k, v in metrics.items()}
+            row["step"] = i + 1
+            if telemetry is not None:
+                row.update(telemetry(row))
+            history.append(row)
+        if checkpoint_manager is not None and checkpoint_every \
+                and (i + 1) % checkpoint_every == 0:
+            checkpoint_manager.save(int(state.step), state)
+    return state, history

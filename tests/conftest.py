@@ -1,0 +1,8 @@
+import os
+import sys
+
+# tests are documented to run with PYTHONPATH=src; make it robust anyway
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

@@ -1,0 +1,26 @@
+"""Test helpers: subprocess runner for multi-device (forced host platform)
+tests — jax locks the device count at first init, so anything needing >1 CPU
+device runs in a child process."""
+import os
+import subprocess
+import sys
+import textwrap
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "src")
+
+
+def run_multidevice(code: str, n_devices: int = 8, timeout: int = 560) -> str:
+    """Run `code` in a subprocess with n host devices. Raises on failure,
+    returns stdout."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"multidevice subprocess failed:\nSTDOUT:\n{proc.stdout}\n"
+            f"STDERR:\n{proc.stderr[-4000:]}")
+    return proc.stdout

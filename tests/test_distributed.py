@@ -1,0 +1,168 @@
+"""Multi-device tests (subprocess with forced host device count):
+sharding rules, sharded-vs-unsharded numerical equivalence, distributed MoE,
+pipeline parallelism, elastic checkpoint resharding, trace extraction."""
+import numpy as np
+import pytest
+
+from helpers import run_multidevice
+
+
+def test_param_specs_rules():
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.parallel import sharding as sh
+
+    # no mesh: everything replicated, shard() is a no-op
+    tree = {"layers": {"wq": jnp.zeros((4, 8, 16)),
+                       "scale": jnp.zeros((2, 16))}}
+    specs = sh.param_specs(tree)
+    assert all(s == P() for s in jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, P)))
+    x = jnp.ones((4, 4))
+    assert sh.shard(x, "batch", None) is x
+
+
+@pytest.mark.slow
+def test_sharded_train_step_matches_unsharded():
+    run_multidevice("""
+        import jax, numpy as np, jax.numpy as jnp, dataclasses
+        from repro.configs.base import get_config
+        from repro.models import LM
+        from repro.parallel import sharding as sh
+        from repro.train.optimizer import AdamWConfig
+        from repro.train.train_loop import make_train_state, make_train_step
+        from repro.data.pipeline import for_arch, make_batch
+        from repro.launch.mesh import make_host_mesh
+
+        cfg = dataclasses.replace(get_config("tinyllama-1.1b").reduced(),
+                                  dtype="float32")
+        model = LM(cfg)
+        opt = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+        dcfg = for_arch(cfg, seq_len=32, global_batch=8)
+        batch = make_batch(dcfg, 0)
+
+        # unsharded reference
+        state = make_train_state(model, jax.random.key(0), opt)
+        step = make_train_step(model, opt)
+        ref_state, ref_m = jax.jit(step)(state, batch)
+
+        # sharded (data=4, model=2)
+        mesh = make_host_mesh(data=4, model=2)
+        ctx = sh.make_context(mesh)
+        with sh.use_mesh(ctx):
+            state2 = make_train_state(model, jax.random.key(0), opt)
+            specs = sh.param_specs(state2, cfg.n_experts, ctx)
+            shardings = sh.named_shardings(specs, ctx)
+            state2 = jax.device_put(state2, shardings)
+            out_state, m = jax.jit(step)(state2, batch)
+        rel = abs(float(m["loss"]) - float(ref_m["loss"])) / abs(float(ref_m["loss"]))
+        assert rel < 1e-4, (float(m["loss"]), float(ref_m["loss"]))
+        for a, b in zip(jax.tree.leaves(ref_state.params),
+                        jax.tree.leaves(out_state.params)):
+            err = float(jnp.abs(a - jnp.asarray(b)).max())
+            assert err < 1e-4, err
+        print("OK")
+    """, n_devices=8)
+
+
+@pytest.mark.slow
+def test_distributed_moe_matches_local():
+    run_multidevice("""
+        import jax, numpy as np, jax.numpy as jnp
+        from repro.models.moe import moe_init, moe_apply
+        from repro.models.moe_sharded import moe_apply_distributed
+        from repro.parallel import sharding as sh
+        from repro.launch.mesh import make_host_mesh
+
+        rng = np.random.default_rng(0)
+        p = moe_init(jax.random.key(1), 32, n_experts=4, moe_d_ff=16,
+                     n_shared=2, dtype=jnp.float32)
+        x = jnp.asarray(rng.standard_normal((8, 16, 32)), jnp.float32)
+        ref, ref_aux = moe_apply(p, x, top_k=2, capacity_factor=8.0)
+
+        mesh = make_host_mesh(data=4, model=2)
+        ctx = sh.make_context(mesh)
+        with sh.use_mesh(ctx):
+            def f(p, x):
+                out, aux = moe_apply_distributed(p, x, top_k=2,
+                                                 capacity_factor=8.0, ctx=ctx)
+                return out, aux["aux_loss"]
+            out, aux = jax.jit(f)(p, x)
+        err = float(jnp.abs(out - ref).max())
+        assert err < 1e-4, err
+        # aux loss averages the same stats
+        assert abs(float(aux) - float(ref_aux["aux_loss"])) < 0.2
+        print("OK")
+    """, n_devices=8)
+
+
+@pytest.mark.slow
+def test_pipeline_parallel_matches_sequential():
+    run_multidevice("""
+        import jax, numpy as np, jax.numpy as jnp
+        from repro.parallel.pipeline import pipeline_forward
+        from repro.launch.mesh import make_host_mesh
+
+        n_stages, n_micro, mb, d = 4, 8, 2, 16
+        rng = np.random.default_rng(0)
+        Ws = jnp.asarray(rng.standard_normal((n_stages, d, d)) * 0.3,
+                         jnp.float32)
+        x = jnp.asarray(rng.standard_normal((n_micro, mb, d)), jnp.float32)
+
+        def stage_fn(w, h):
+            return jnp.tanh(h @ w)
+
+        mesh = jax.make_mesh((4,), ("pod",))
+        fn = pipeline_forward(stage_fn, n_stages, mesh, axis="pod")
+        out = jax.jit(fn)(Ws, x)
+
+        ref = x
+        for s in range(n_stages):
+            ref = jnp.tanh(ref @ Ws[s])
+        err = float(jnp.abs(out - ref).max())
+        assert err < 1e-5, err
+        print("OK")
+    """, n_devices=4)
+
+
+@pytest.mark.slow
+def test_elastic_checkpoint_reshard(tmp_path):
+    run_multidevice(f"""
+        import jax, numpy as np, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.train.checkpoint import CheckpointManager
+
+        tree = {{"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}}
+        mesh_a = jax.make_mesh((4, 2), ("data", "model"))
+        sharded = jax.device_put(tree, {{"w": NamedSharding(mesh_a, P("data", "model"))}})
+        mgr = CheckpointManager({str(tmp_path)!r}, keep=2, async_save=False)
+        mgr.save(1, sharded, block=True)
+
+        # 'restart' on a different mesh shape (elastic resize 8 -> 4 chips)
+        mesh_b = jax.make_mesh((2, 2), ("data", "model"))
+        new_shardings = {{"w": NamedSharding(mesh_b, P("model", "data"))}}
+        restored, _ = mgr.restore(tree, shardings=new_shardings)
+        assert np.array_equal(np.asarray(restored["w"]),
+                              np.arange(64, dtype=np.float32).reshape(8, 8))
+        assert restored["w"].sharding == new_shardings["w"]
+        print("OK")
+    """, n_devices=8)
+
+
+def test_trace_extraction_from_jaxpr():
+    import jax.numpy as jnp
+    from repro.core.trace import profile_fn, summarize, trace_penalty
+    from repro.core.fpu_arch import DP_CMA, get_design
+
+    def f(x, w1, w2):
+        return jnp.sum(jnp.tanh(x @ w1) @ w2)
+
+    prof = profile_fn(f, jnp.ones((4, 32)), jnp.ones((32, 16)),
+                      jnp.ones((16, 8)))
+    s = summarize(prof)
+    assert s["chain_flop_frac"] > 0.9  # matmul dominated
+    assert 8 < s["mean_chain_len"] < 33
+    # CMA forwarding beats FMA on this accumulation-heavy profile
+    assert trace_penalty(DP_CMA, prof) < trace_penalty(
+        get_design("dp_fma"), prof)

@@ -1,0 +1,86 @@
+"""formats.quantize: bitwise agreement with ml_dtypes + RNE properties."""
+import math
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.formats import (BF16, FP8_E4M3, FP8_E5M2, FP16, FP32, TF32,
+                                FloatFormat, quantize, quantize_stochastic)
+
+CASES = [
+    (BF16, ml_dtypes.bfloat16),
+    (FP16, np.float16),
+    (FP8_E4M3, ml_dtypes.float8_e4m3),
+    (FP8_E5M2, ml_dtypes.float8_e5m2),
+]
+
+
+@pytest.mark.parametrize("fmt,mdt", CASES, ids=lambda c: str(c))
+def test_quantize_bitwise_vs_ml_dtypes(fmt, mdt):
+    rng = np.random.default_rng(0)
+    x = (rng.standard_normal(50_000).astype(np.float32)
+         * np.exp2(rng.integers(-30, 30, 50_000)).astype(np.float32))
+    # sprinkle specials and boundaries
+    x[:8] = [0.0, -0.0, np.inf, -np.inf, np.nan, 1.0, -1.0, 0.5]
+    ours = np.asarray(quantize(jnp.asarray(x), fmt))
+    with np.errstate(over="ignore"):
+        ref = x.astype(mdt).astype(np.float32)
+    neq = ours != ref
+    neq &= ~(np.isnan(ours) & np.isnan(ref))
+    assert not neq.any(), f"{fmt}: {x[neq][:5]} -> {ours[neq][:5]} vs {ref[neq][:5]}"
+
+
+def test_quantize_fp32_identity():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal(1000), jnp.float32)
+    assert (quantize(x, FP32) == x).all()
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.floats(allow_nan=False, allow_infinity=False, width=32),
+       st.sampled_from([BF16, FP16, FP8_E4M3, TF32]))
+def test_quantize_idempotent(x, fmt):
+    y = float(quantize(jnp.float32(x), fmt))
+    z = float(quantize(jnp.float32(y), fmt))
+    assert y == z or (math.isnan(y) and math.isnan(z))
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.floats(-1e4, 1e4, allow_nan=False, width=32),
+       st.floats(-1e4, 1e4, allow_nan=False, width=32))
+def test_quantize_monotone(a, b):
+    fmt = BF16
+    qa = float(quantize(jnp.float32(a), fmt))
+    qb = float(quantize(jnp.float32(b), fmt))
+    if a <= b:
+        assert qa <= qb
+
+
+def test_quantize_halfway_ties_to_even():
+    # bf16 has 7 mantissa bits: between 1.0 and 1+2^-7, the midpoint
+    # 1 + 2^-8 must round to even (1.0)
+    fmt = BF16
+    mid = np.float32(1.0 + 2.0 ** -8)
+    assert float(quantize(jnp.float32(mid), fmt)) == 1.0
+    mid2 = np.float32(1.0 + 3 * 2.0 ** -8)  # between 1+2^-7 and 1+2^-6
+    assert float(quantize(jnp.float32(mid2), fmt)) == float(
+        np.float32(1.0 + 2.0 ** -6))
+
+
+def test_quantize_overflow_to_inf():
+    assert float(quantize(jnp.float32(3.3e38), BF16)) < np.inf
+    assert float(quantize(jnp.float32(5e38), BF16)) == np.inf
+    assert float(quantize(jnp.float32(-5e38), BF16)) == -np.inf
+    assert float(quantize(jnp.float32(500.0), FP8_E4M3)) == np.inf
+
+
+def test_stochastic_rounding_unbiased():
+    fmt = BF16
+    x = jnp.full((20000,), 1.0 + 2.0 ** -9, jnp.float32)  # 1/4 of the way up
+    y = quantize_stochastic(x, fmt, jax.random.key(0))
+    up = float(jnp.mean((y > 1.0).astype(jnp.float32)))
+    assert 0.15 < up < 0.35  # expect ~0.25

@@ -1,0 +1,117 @@
+"""Pallas kernels (interpret mode) vs pure-jnp oracles.
+
+Contract: bitwise equality on tile-multiple shapes; on ragged shapes XLA:CPU
+may reassociate the block dot differently per shape, so we allow at most one
+target-format ulp elementwise."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.formats import BF16, FP8_E4M3, TF32, FloatFormat
+from repro.kernels import ref
+from repro.kernels.fma_emu import fma_emu_matmul
+from repro.kernels.ops import emulated_matmul, quantize_tensor
+from repro.kernels.quantize_kernel import quantize_2d
+
+FMTS = [BF16, FP8_E4M3, TF32]
+STYLES = ["fused", "cascade", "cascade_fwd"]
+
+
+def _ulp_bound(fmt, a, b, n=2):
+    """Error bound for kernel-vs-ref under DIFFERENT block tilings: XLA:CPU
+    reassociates differently per dot shape, so the accumulator can differ by
+    ~1 of ITS ulps at its running magnitude (bounded by |a|@|b|), which under
+    cancellation is much larger than an output-magnitude ulp."""
+    acc_mag = np.asarray(jnp.abs(a) @ jnp.abs(b))
+    mag = np.maximum(acc_mag, fmt.min_normal)
+    exp = np.floor(np.log2(mag))
+    return np.exp2(exp - fmt.man_bits) * n * 1.01
+
+
+@pytest.mark.parametrize("fmt", FMTS, ids=lambda f: f.name)
+@pytest.mark.parametrize("style", STYLES)
+def test_kernel_bitwise_on_tile_multiples(fmt, style):
+    """Bitwise contract: when the kernel's (bm,bn) covers the full output
+    (so per-k-block dot shapes match the reference exactly), interpret-mode
+    output equals the oracle bit for bit."""
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((64, 128)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((128, 96)), jnp.float32)
+    out_k = fma_emu_matmul(a, b, fmt=fmt, style=style, interpret=True,
+                           bm=64, bn=96, bk=64)
+    out_r = ref.fma_emu_matmul_ref(a, b, fmt=fmt, style=style, bk=64)
+    assert (np.asarray(out_k) == np.asarray(out_r)).all()
+
+
+@pytest.mark.parametrize("fmt", FMTS, ids=lambda f: f.name)
+@pytest.mark.parametrize("style", STYLES)
+def test_kernel_ragged_within_one_ulp(fmt, style):
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.standard_normal((61, 300)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((300, 37)), jnp.float32)
+    out_k = np.asarray(fma_emu_matmul(a, b, fmt=fmt, style=style,
+                                      interpret=True, bm=32, bn=32, bk=64))
+    out_r = np.asarray(ref.fma_emu_matmul_ref(a, b, fmt=fmt, style=style,
+                                              bk=64))
+    err = np.abs(out_k - out_r)
+    assert (err <= _ulp_bound(fmt, a, b)).all(), err.max()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 80), st.integers(1, 40),
+       st.sampled_from(FMTS), st.sampled_from(STYLES))
+def test_kernel_shape_sweep(m, k, n, fmt, style):
+    rng = np.random.default_rng(m * 1000 + k * 10 + n)
+    a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    out_k = np.asarray(fma_emu_matmul(a, b, fmt=fmt, style=style,
+                                      interpret=True, bm=16, bn=16, bk=32))
+    out_r = np.asarray(ref.fma_emu_matmul_ref(a, b, fmt=fmt, style=style,
+                                              bk=32))
+    assert (np.abs(out_k - out_r) <= _ulp_bound(fmt, a, b)).all()
+
+
+def test_quantize_kernel_bitwise():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((100, 200)) * 50, jnp.float32)
+    for fmt in FMTS:
+        q = quantize_2d(x, fmt=fmt, interpret=True, block_rows=32)
+        assert (np.asarray(q) == np.asarray(ref.quantize_ref(x, fmt=fmt))).all()
+
+
+def test_emulated_matmul_wrapper_batched():
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(rng.standard_normal((2, 3, 16, 32)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((32, 8)), jnp.float32)
+    out = emulated_matmul(a, b, fmt="bf16", style="fused", impl="ref")
+    assert out.shape == (2, 3, 16, 8)
+    out_i = emulated_matmul(a, b, fmt="bf16", style="fused", impl="interpret")
+    assert np.allclose(np.asarray(out), np.asarray(out_i), atol=1e-6)
+
+
+def test_quantize_tensor_wrapper():
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.standard_normal((3, 5, 7)), jnp.float32)
+    q1 = quantize_tensor(x, fmt="bf16", impl="ref")
+    q2 = quantize_tensor(x, fmt="bf16", impl="interpret")
+    assert (np.asarray(q1) == np.asarray(q2)).all()
+
+
+def test_kernel_style_semantics_vs_softfloat():
+    """cascade_fwd with a single k-block equals the fused single-rounding
+    result of the whole-block dot in f32; cascade rounds the accumulator."""
+    from repro.core.formats import quantize
+    rng = np.random.default_rng(5)
+    a = jnp.asarray(rng.standard_normal((8, 32)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((32, 8)), jnp.float32)
+    fused = ref.fma_emu_matmul_ref(a, b, fmt=BF16, style="fused", bk=32)
+    fwd = ref.fma_emu_matmul_ref(a, b, fmt=BF16, style="cascade_fwd", bk=32)
+    casc = ref.fma_emu_matmul_ref(a, b, fmt=BF16, style="cascade", bk=32)
+    qa, qb = quantize(a, BF16), quantize(b, BF16)
+    expect = jnp.dot(qa, qb, preferred_element_type=jnp.float32)
+    assert (np.asarray(fused) == np.asarray(expect)).all()
+    assert (np.asarray(fwd) == np.asarray(quantize(expect, BF16))).all()
+    assert (np.asarray(casc) == np.asarray(
+        quantize(quantize(expect, BF16), BF16))).all()

@@ -1,0 +1,103 @@
+"""Latency-penalty simulator (Fig 2c), DSE picks (Table I architecture
+conclusions), and body-bias study (Fig 4 claims)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.body_bias import bb_study, energy_vs_utilization
+from repro.core.dse import (best_latency_design, best_throughput_design,
+                            enumerate_structures, latency_pareto,
+                            pareto_mask, sweep, throughput_pareto)
+from repro.core.fpu_arch import DP_CMA, SP_CMA, SP_FMA, get_design
+from repro.core.latency_sim import (SpecMix, average_latency_penalty,
+                                    calibrated_spec_mix, chain_penalty,
+                                    fig2c_penalties, penalty_from_waits)
+
+
+# ---------------------------------------------------------------- Fig 2(c)
+def test_fig2c_reductions_match_paper():
+    mix = calibrated_spec_mix()
+    r = fig2c_penalties(mix)
+    assert abs(r["reduction_vs_fwd"] - 0.37) < 0.05, r
+    assert abs(r["reduction_vs_nofwd"] - 0.57) < 0.05, r
+
+
+def test_penalty_monotone_in_waits():
+    mix = SpecMix(0.3, 0.1, 0.2, 0.5, n_ops=20_000)
+    p = [penalty_from_waits(w, w + 2, mix) for w in (1, 2, 3, 4)]
+    assert all(a <= b + 1e-9 for a, b in zip(p, p[1:])), p
+
+
+def test_chain_penalty_analytic_vs_sim():
+    """A pure distance-1 accumulation chain: analytic == simulated."""
+    design = DP_CMA  # acc wait 2 => 1 stall per dependent op
+    n = 5000
+    types = np.ones(n, np.int32)
+    types[0] = 0
+    dists = np.ones(n, np.int32)
+    from repro.core.latency_sim import _simulate
+    import jax.numpy as jnp
+    sim = float(_simulate(jnp.asarray(types), jnp.asarray(dists),
+                          jnp.int32(design.accum_latency_cycles),
+                          jnp.int32(design.mul_dep_latency_cycles)))
+    ana = chain_penalty(design, n)
+    assert abs(sim - ana) < 0.01
+
+
+def test_cma_beats_fma_for_accumulation_chains():
+    assert chain_penalty(DP_CMA, 1000) < chain_penalty(
+        get_design("dp_fma"), 1000)
+
+
+# ---------------------------------------------------------------- DSE
+@pytest.mark.slow
+def test_dse_recovers_paper_architecture_conclusions():
+    """Throughput -> FMA with Booth-3 + simple combiner; latency -> CMA.
+    (Paper: 'FMAs are more area efficient than CMAs' for throughput;
+    CMA wins the latency metric.)"""
+    bt_sp = best_throughput_design("sp")
+    assert bt_sp.design.style == "fma"
+    assert bt_sp.design.booth == 3
+    assert bt_sp.design.tree in ("zm", "array")
+    bt_dp = best_throughput_design("dp")
+    assert bt_dp.design.style == "fma"
+    bl_dp = best_latency_design("dp")
+    assert bl_dp.design.style == "cma"
+    bl_sp = best_latency_design("sp")
+    assert bl_sp.design.style == "cma"
+
+
+def test_pareto_mask_correct():
+    xs = np.array([1.0, 2.0, 0.5, 3.0])
+    ys = np.array([1.0, 0.5, 2.0, 3.0])
+    mask = pareto_mask(xs, ys)
+    assert mask.tolist() == [True, True, True, False]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.floats(0.1, 10), st.floats(0.1, 10)),
+                min_size=2, max_size=40))
+def test_pareto_mask_no_dominated_points(pts):
+    xs = np.array([p[0] for p in pts])
+    ys = np.array([p[1] for p in pts])
+    mask = pareto_mask(xs, ys)
+    assert mask.any()
+    for i in np.where(mask)[0]:
+        dominated = ((xs < xs[i] - 1e-12) & (ys < ys[i] - 1e-12)).any()
+        assert not dominated
+
+
+# ---------------------------------------------------------------- Fig 4
+def test_body_bias_claims():
+    """~20% energy saving at full activity; ~3x static / ~1.5x adaptive
+    energy ratio at 10% utilization (at the Fig-4 low-V_DD point)."""
+    s = bb_study(DP_CMA, vdd=0.6)
+    assert 0.10 < s["bb_energy_saving"] < 0.35
+    assert 2.3 < s["low_util_static_ratio"] < 4.0
+    assert 1.2 < s["low_util_adaptive_ratio"] < 1.9
+
+
+def test_energy_vs_utilization_curves():
+    utils, static, adaptive = energy_vs_utilization(SP_CMA)
+    assert (adaptive <= static + 1e-9).all()
+    assert static[0] > static[-1]  # low utilization costs energy/op

@@ -1,0 +1,137 @@
+"""Per-arch smoke tests (assignment requirement): reduced same-family config,
+one forward/train step on CPU, output shapes + no NaNs; plus decode-vs-
+teacher-forced consistency and full-config parameter-count sanity."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, all_configs, cells, get_config
+from repro.data.pipeline import for_arch, make_batch
+from repro.models import LM
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_loop import make_train_state, make_train_step
+
+# published parameter counts (approx, for sanity bounds)
+PUBLISHED_PARAMS = {
+    "tinyllama-1.1b": 1.1e9,
+    "starcoder2-7b": 7.2e9,
+    "chatglm3-6b": 6.2e9,
+    "deepseek-67b": 67e9,
+    "deepseek-moe-16b": 16.4e9,
+    "mixtral-8x7b": 46.7e9,
+    "internvl2-1b": 0.6e9,  # LM backbone only (ViT is stubbed)
+    "zamba2-1.2b": 1.2e9,
+    "falcon-mamba-7b": 7.3e9,
+    "musicgen-large": 3.3e9,
+}
+
+
+def _batch_for(cfg, B=2, S=32, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S))),
+             "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)))}
+    if cfg.frontend == "vision":
+        batch["prefix_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.n_prefix_tokens, cfg.d_model)),
+            jnp.float32)
+    if cfg.frontend == "audio":
+        batch = {"frame_embeds": jnp.asarray(
+            rng.standard_normal((B, S, cfg.d_model)), jnp.float32),
+            "labels": batch["labels"]}
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch).reduced()
+    model = LM(cfg)
+    batch = _batch_for(cfg)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    state = make_train_state(model, jax.random.key(0), opt)
+    step = make_train_step(model, opt)
+    # forward shapes
+    logits, aux = model.apply(model_params(state), batch.get("tokens"),
+                              prefix_embeds=batch.get("prefix_embeds"),
+                              frame_embeds=batch.get("frame_embeds"))
+    S_total = 32 + (cfg.n_prefix_tokens if cfg.frontend == "vision" else 0)
+    assert logits.shape == (2, S_total, model.vocab_padded)
+    assert bool(jnp.isfinite(logits).all())
+    # one train step
+    state2, metrics = jax.jit(step)(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert float(metrics["grad_norm"]) > 0
+    # params actually changed (check a 2D weight; 1D bf16 norm scales can
+    # round back to their old value at lr ~1e-3)
+    changed = any(
+        a.ndim >= 2 and not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(state.params),
+                        jax.tree.leaves(state2.params)))
+    assert changed
+
+
+def model_params(state):
+    return state.params
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_teacher_forced(arch):
+    cfg = dataclasses.replace(get_config(arch).reduced(), dtype="float32")
+    model = LM(cfg)
+    params = model.init(jax.random.key(1))
+    rng = np.random.default_rng(1)
+    if cfg.frontend == "audio":
+        return  # decode path uses token embeddings; prompt is frame stub
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 12)))
+    kw = {}
+    if cfg.frontend == "vision":
+        kw["prefix_embeds"] = jnp.asarray(
+            rng.standard_normal((1, cfg.n_prefix_tokens, cfg.d_model)),
+            jnp.float32)
+    full, _ = model.apply(params, toks, **kw)
+    prefix = cfg.n_prefix_tokens if cfg.frontend == "vision" else 0
+    last, cache = model.prefill(params, toks[:, :8], max_len=12 + prefix,
+                                **kw)
+    tol = 0.05  # f32 + flash-block reassociation + MoE routing flips
+    assert float(jnp.abs(last - full[:, -5]).max()) < tol
+    for i in range(8, 12):
+        lg, cache = model.decode_step(params, cache, toks[:, i:i + 1])
+        assert float(jnp.abs(lg[:, 0] - full[:, i - 12]).max()) < tol
+
+
+def test_full_config_param_counts():
+    for arch, published in PUBLISHED_PARAMS.items():
+        cfg = get_config(arch)
+        ours = cfg.param_count()
+        ratio = ours / published
+        assert 0.6 < ratio < 1.5, f"{arch}: {ours:.3g} vs {published:.3g}"
+
+
+def test_cells_long_context_rule():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        cs = cells(arch)
+        if cfg.supports_long_context:
+            assert "long_500k" in cs, arch
+        else:
+            assert "long_500k" not in cs, arch
+    # exactly 33 runnable cells (40 - 7 documented skips)
+    assert sum(len(cells(a)) for a in ARCH_IDS) == 33
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "zamba2-1.2b"])
+def test_short_training_reduces_loss(arch):
+    cfg = get_config(arch).reduced()
+    model = LM(cfg)
+    opt = AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=60,
+                      weight_decay=0.0)
+    state = make_train_state(model, jax.random.key(2), opt)
+    step = jax.jit(make_train_step(model, opt))
+    dcfg = for_arch(cfg, seq_len=32, global_batch=8)
+    losses = []
+    for i in range(40):
+        state, m = step(state, make_batch(dcfg, i))
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2, losses[::8]
