@@ -15,6 +15,7 @@ def main() -> None:
     import fig2_latency_penalty
     import fig3_pareto
     import fig4_body_bias
+    import dse_bench
     import kernel_bench
     import roofline_table
 
@@ -23,6 +24,7 @@ def main() -> None:
     fig2_latency_penalty.run()
     fig3_pareto.run()
     fig4_body_bias.run()
+    dse_bench.run()
     kernel_bench.run()
     roofline_table.run()
 

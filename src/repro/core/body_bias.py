@@ -102,16 +102,21 @@ def bb_study(design: FPUDesign, params: TechParams | None = None,
 
 def energy_vs_utilization(design: FPUDesign, params: TechParams | None = None,
                           utils: np.ndarray | None = None):
-    """Fig.4-style curves: energy/op vs utilization, static vs adaptive BB."""
+    """Fig.4-style curves: energy/op vs utilization, static vs adaptive BB.
+
+    Array-native: the model is evaluated once per body-bias point and the
+    whole utilization axis is computed by broadcasting (the electrical state
+    does not depend on utilization; only the leakage-vs-wallclock accounting
+    does), so the curve resolution is free.
+    """
     params = params or calibrate()
     utils = np.asarray(utils if utils is not None
-                       else np.geomspace(0.01, 1.0, 25))
-    static, adaptive = [], []
-    for u in utils:
-        static.append(energy_per_op(design, params, vdd=design.vdd,
-                                    vbb_active=1.2, vbb_idle=None,
-                                    util=float(u))["e_total_pj"])
-        adaptive.append(energy_per_op(design, params, vdd=design.vdd,
-                                      vbb_active=1.2, vbb_idle=0.0,
-                                      util=float(u))["e_total_pj"])
-    return utils, np.asarray(static), np.asarray(adaptive)
+                       else np.geomspace(0.01, 1.0, 25), np.float64)
+    p = predict(design, params, vdd=design.vdd, vbb=1.2)
+    p_idle = predict(design, params, vdd=design.vdd, vbb=0.0)
+    e_dyn = p["e_op_pj"] / 2.0  # per FLOP (2 FLOP per FMAC op)
+    leak_active, leak_idle = p["p_leak_mw"], p_idle["p_leak_mw"]
+    denom = 2.0 * p["freq_ghz"] * utils
+    static = e_dyn + (leak_active * utils + leak_active * (1 - utils)) / denom
+    adaptive = e_dyn + (leak_active * utils + leak_idle * (1 - utils)) / denom
+    return utils, static, adaptive

@@ -23,11 +23,12 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Dict, Tuple
+from typing import Dict, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import enable_x64
 
 from repro.core.fpu_arch import FABRICATED, TABLE_I, FPUDesign
 
@@ -260,6 +261,168 @@ def predict(d: FPUDesign, params: TechParams, *, util: float = 1.0,
 
 
 # ---------------------------------------------------------------------------
+# Batched (structure-of-arrays) prediction — the DSE hot path
+# ---------------------------------------------------------------------------
+_DERIVED_KEYS = ("gflops", "gflops_per_w", "gflops_per_mm2")
+METRIC_KEYS = ("cycle_ns", "freq_ghz", "e_op_pj", "p_dyn_mw", "p_leak_mw",
+               "p_total_mw", "area_mm2") + _DERIVED_KEYS
+
+
+def feature_matrix(designs: Sequence[FPUDesign]
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Structure-of-arrays design description: (features (n, 5),
+    stage depths (n,), is_cma (n,)) for a batch of designs."""
+    feats = np.asarray([_feature_vector(d) for d in designs], np.float64)
+    depths = np.asarray([stage_depth_fo4(d) for d in designs], np.float64)
+    is_cma = np.asarray([d.style == "cma" for d in designs], bool)
+    return feats, depths, is_cma
+
+
+@jax.jit
+def _predict_batch_jit(pvec, feats, depths, is_cma, vdd, vbb, util):
+    def one(f, sd, cma):
+        return _predict_core(pvec, f, sd, cma, vdd, vbb, util)
+    return jax.vmap(one)(feats, depths, is_cma)
+
+
+@jax.jit
+def _predict_points_jit(pvec, feats, depths, is_cma, vdd, vbb, util):
+    def one(f, sd, cma, v, b):
+        return _predict_core(pvec, f, sd, cma, v, b, util)
+    return jax.vmap(one)(feats, depths, is_cma, vdd, vbb)
+
+
+def _predict_np_batch(pvec, feats, depths, is_cma, vdd, vbb, util):
+    """NumPy twin of the batched path; bitwise-identical to per-design
+    ``_predict_np`` (used where exact parity with the legacy per-point
+    loop matters, e.g. equivalence tests)."""
+    tau, alpha, vt0, k_bb, s_dec, s_cap, s_leak, s_area = pvec[:8]
+    speed = np.where(is_cma, pvec[12], pvec[13])[:, None, None]
+    coeffs = np.array([pvec[8], pvec[9], pvec[10], pvec[11], 1.0])
+    cap = np.sum(coeffs[None, :] * feats, axis=1)[:, None, None]
+    depths = depths[:, None, None]
+    vdd = np.asarray(vdd, np.float64)[None, :, None]
+    vbb = np.asarray(vbb, np.float64)[None, None, :]
+    vt = vt0 - k_bb * vbb
+    num = vdd / np.maximum(vdd - vt, 1e-3) ** alpha
+    den = 1.0 / (1.0 - vt0) ** alpha
+    dscale = num / den
+    cycle_ns = tau / speed * (depths * _IMBALANCE + _CLK_OVH_FO4) * dscale
+    freq_ghz = 1.0 / cycle_ns
+    cap_eff = cap * speed ** 0.5
+    e_op_pj = s_cap * cap_eff * vdd * vdd
+    p_dyn_mw = e_op_pj * freq_ghz * util
+    p_leak_mw = s_leak * (cap_eff * 1e-4) * vdd * 10.0 ** (-vt / s_dec)
+    area_mm2 = s_area * cap_eff * np.ones_like(cycle_ns)
+    out = dict(cycle_ns=cycle_ns, freq_ghz=freq_ghz, e_op_pj=e_op_pj,
+               p_dyn_mw=p_dyn_mw, p_leak_mw=p_leak_mw,
+               p_total_mw=p_dyn_mw + p_leak_mw, area_mm2=area_mm2)
+    shape = np.broadcast_shapes(*(v.shape for v in out.values()))
+    return {k: np.broadcast_to(v, shape).copy() for k, v in out.items()}
+
+
+def _attach_derived(out: Dict[str, np.ndarray], util: float
+                    ) -> Dict[str, np.ndarray]:
+    # canonical key order (jit round-trips pytrees with sorted keys)
+    out = {k: out[k] for k in METRIC_KEYS if k in out}
+    gflops = 2.0 * out["freq_ghz"] * util
+    out["gflops"] = gflops
+    out["gflops_per_w"] = gflops / (out["p_total_mw"] * 1e-3)
+    out["gflops_per_mm2"] = gflops / out["area_mm2"]
+    return out
+
+
+def _anchor_factor_arrays(designs: Sequence[FPUDesign], params: TechParams
+                          ) -> Dict[str, np.ndarray]:
+    """Per-design multiplicative silicon corrections (identity for
+    non-fabricated designs), as arrays aligned with ``designs``."""
+    corr = _anchor_corrections(params)
+    fac = {k: np.ones(len(designs)) for k in ("freq", "area", "leak", "dyn")}
+    for i, d in enumerate(designs):
+        c = corr.get(d.name)
+        if c is not None:
+            for k in fac:
+                fac[k][i] = c[k]
+    return fac
+
+
+def _apply_anchor(out: Dict[str, np.ndarray], fac: Dict[str, np.ndarray]
+                  ) -> Dict[str, np.ndarray]:
+    shape = (-1,) + (1,) * (out["freq_ghz"].ndim - 1)
+    freq, area = fac["freq"].reshape(shape), fac["area"].reshape(shape)
+    leak, dyn = fac["leak"].reshape(shape), fac["dyn"].reshape(shape)
+    out["freq_ghz"] = out["freq_ghz"] * freq
+    out["cycle_ns"] = out["cycle_ns"] / freq
+    out["area_mm2"] = out["area_mm2"] * area
+    out["p_leak_mw"] = out["p_leak_mw"] * leak
+    out["p_dyn_mw"] = out["p_dyn_mw"] * dyn
+    out["e_op_pj"] = out["e_op_pj"] * dyn
+    out["p_total_mw"] = out["p_dyn_mw"] + out["p_leak_mw"]
+    return out
+
+
+def predict_batch(designs: Sequence[FPUDesign], params: TechParams,
+                  vdd_grid, vbb_grid, util: float = 1.0,
+                  anchored: bool = False, backend: str = "jax"
+                  ) -> Dict[str, np.ndarray]:
+    """Full metric tensor over (n_designs x n_vdd x n_vbb) in one dispatch.
+
+    ``backend='jax'`` traces/evaluates the whole batch as a single jitted
+    vmap (in float64 via the x64 context); ``backend='numpy'`` uses the
+    broadcasting twin that is bitwise-identical to the legacy per-design
+    ``predict_grid`` path.  Returns float64 arrays keyed by METRIC_KEYS.
+    """
+    designs = list(designs)
+    feats, depths, is_cma = feature_matrix(designs)
+    vdd = np.asarray(vdd_grid, np.float64).ravel()
+    vbb = np.asarray(vbb_grid, np.float64).ravel()
+    pvec = params.as_array()
+    if backend == "jax":
+        with enable_x64():
+            out = _predict_batch_jit(pvec, feats, depths, is_cma,
+                                     vdd[:, None], vbb[None, :], util)
+        out = {k: np.asarray(v, np.float64) for k, v in out.items()}
+        shape = (len(designs), vdd.size, vbb.size)
+        out = {k: np.broadcast_to(
+            v.reshape(v.shape + (1,) * (3 - v.ndim)), shape).copy()
+            for k, v in out.items()}
+    elif backend == "numpy":
+        out = _predict_np_batch(pvec, feats, depths, is_cma, vdd, vbb, util)
+    else:
+        raise ValueError(f"backend {backend!r}")
+    if anchored:
+        out = _apply_anchor(out, _anchor_factor_arrays(designs, params))
+    return _attach_derived(out, util)
+
+
+def predict_points(designs: Sequence[FPUDesign], params: TechParams,
+                   vdd=None, vbb=None, util: float = 1.0,
+                   anchored: bool = False) -> Dict[str, np.ndarray]:
+    """Metrics for each design at its own operating point, batched.
+
+    ``vdd``/``vbb`` are (n_designs,) vectors (default: each design's own
+    voltage attributes).  Returns float64 arrays of shape (n_designs,).
+    """
+    designs = list(designs)
+    feats, depths, is_cma = feature_matrix(designs)
+    vdd = np.asarray([d.vdd for d in designs] if vdd is None else vdd,
+                     np.float64)
+    vbb = np.asarray([d.vbb for d in designs] if vbb is None else vbb,
+                     np.float64)
+    vdd, vbb = np.broadcast_to(vdd, (len(designs),)).astype(np.float64), \
+        np.broadcast_to(vbb, (len(designs),)).astype(np.float64)
+    with enable_x64():
+        out = _predict_points_jit(params.as_array(), feats, depths, is_cma,
+                                  vdd, vbb, util)
+    out = {k: np.broadcast_to(np.asarray(v, np.float64),
+                              (len(designs),)).copy()
+           for k, v in out.items()}
+    if anchored:
+        out = _apply_anchor(out, _anchor_factor_arrays(designs, params))
+    return _attach_derived(out, util)
+
+
+# ---------------------------------------------------------------------------
 # Calibration
 # ---------------------------------------------------------------------------
 def _make_static_inputs():
@@ -323,20 +486,25 @@ def _anchor_corrections(params: TechParams) -> Dict[str, Dict[str, float]]:
 
 
 def calibration_report(params: TechParams | None = None):
-    """Relative errors of the global fit vs Table I (benchmarks/tests)."""
+    """Relative errors of the global fit vs Table I (benchmarks/tests).
+
+    All four fabricated units are evaluated in one ``predict_points`` batch.
+    """
     params = params or calibrate()
+    names = list(FABRICATED)
+    meas = [TABLE_I[n] for n in names]
+    p = predict_points([FABRICATED[n] for n in names], params,
+                       vdd=[m.vdd for m in meas], vbb=[m.vbb for m in meas])
     rep = {}
-    for name, d in FABRICATED.items():
-        m = TABLE_I[name]
-        p = predict(d, params, vdd=m.vdd, vbb=m.vbb)
+    for i, (name, m) in enumerate(zip(names, meas)):
         rep[name] = {
-            "freq_rel_err": p["freq_ghz"] / m.freq_ghz - 1.0,
-            "leak_rel_err": p["p_leak_mw"] / m.leak_mw - 1.0,
-            "power_rel_err": p["p_total_mw"] / m.power_mw - 1.0,
-            "area_rel_err": p["area_mm2"] / m.area_mm2 - 1.0,
-            "gflops_per_w_pred": p["gflops_per_w"],
+            "freq_rel_err": float(p["freq_ghz"][i]) / m.freq_ghz - 1.0,
+            "leak_rel_err": float(p["p_leak_mw"][i]) / m.leak_mw - 1.0,
+            "power_rel_err": float(p["p_total_mw"][i]) / m.power_mw - 1.0,
+            "area_rel_err": float(p["area_mm2"][i]) / m.area_mm2 - 1.0,
+            "gflops_per_w_pred": float(p["gflops_per_w"][i]),
             "gflops_per_w_meas": m.gflops_per_w,
-            "gflops_per_mm2_pred": p["gflops_per_mm2"],
+            "gflops_per_mm2_pred": float(p["gflops_per_mm2"][i]),
             "gflops_per_mm2_meas": m.gflops_per_mm2,
         }
     return rep

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Tuple
+from typing import Dict, Iterable, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -59,9 +59,9 @@ class SpecMix:
         return types, dists
 
 
-@functools.partial(jax.jit, static_argnames=())
-def _simulate(types: jnp.ndarray, dists: jnp.ndarray,
-              acc_wait: jnp.ndarray, mul_wait: jnp.ndarray) -> jnp.ndarray:
+def _simulate_core(types: jnp.ndarray, dists: jnp.ndarray,
+                   acc_wait: jnp.ndarray, mul_wait: jnp.ndarray
+                   ) -> jnp.ndarray:
     """In-order issue: t_i = max(t_{i-1}+1, t_dep + wait(type)). Returns
     average stall (penalty) per op."""
     n = types.shape[0]
@@ -82,52 +82,114 @@ def _simulate(types: jnp.ndarray, dists: jnp.ndarray,
     return jnp.sum(stalls) / n
 
 
+_simulate = jax.jit(_simulate_core)
+# one trace, a vector of (acc_wait, mul_wait) configurations -> (K,)
+_simulate_configs = jax.jit(
+    jax.vmap(_simulate_core, in_axes=(None, None, 0, 0)))
+# a batch of traces x a vector of configurations -> (B, K)
+_simulate_traces_configs = jax.jit(
+    jax.vmap(jax.vmap(_simulate_core, in_axes=(None, None, 0, 0)),
+             in_axes=(0, 0, None, None)))
+
+
+# Explicit penalty cache keyed by ((acc_wait, mul_wait), mix).  The sweep in
+# repro.core.dse evaluates many designs that collapse onto few distinct wait
+# pairs; all missing pairs for a mix are simulated in ONE vmapped dispatch.
+_PENALTY_CACHE: Dict[Tuple[Tuple[int, int], SpecMix], float] = {}
+
+
+def clear_penalty_cache() -> None:
+    _PENALTY_CACHE.clear()
+
+
+def penalties_for_waits(pairs: Iterable[Tuple[int, int]], mix: SpecMix
+                        ) -> np.ndarray:
+    """Penalties for a batch of (acc_wait, mul_wait) pairs on one mixture.
+
+    Cached per (pair, mix); uncached pairs run as a single vmapped
+    simulation batch.  Returns a float64 array aligned with ``pairs``.
+    """
+    pairs = [(int(a), int(m)) for a, m in pairs]
+    missing = sorted({p for p in pairs if (p, mix) not in _PENALTY_CACHE})
+    if missing:
+        types, dists = mix.sample()
+        acc = jnp.asarray([p[0] for p in missing], jnp.int32)
+        mul = jnp.asarray([p[1] for p in missing], jnp.int32)
+        pens = np.asarray(_simulate_configs(jnp.asarray(types),
+                                            jnp.asarray(dists), acc, mul),
+                          dtype=np.float64)
+        for p, v in zip(missing, pens):
+            _PENALTY_CACHE[(p, mix)] = float(v)
+    return np.asarray([_PENALTY_CACHE[(p, mix)] for p in pairs], np.float64)
+
+
 def average_latency_penalty(design: FPUDesign, mix: SpecMix) -> float:
-    types, dists = mix.sample()
-    return float(_simulate(jnp.asarray(types), jnp.asarray(dists),
-                           jnp.int32(design.accum_latency_cycles),
-                           jnp.int32(design.mul_dep_latency_cycles)))
+    return float(penalties_for_waits(
+        [(design.accum_latency_cycles, design.mul_dep_latency_cycles)],
+        mix)[0])
 
 
 def penalty_from_waits(acc_wait: int, mul_wait: int, mix: SpecMix) -> float:
-    types, dists = mix.sample()
-    return float(_simulate(jnp.asarray(types), jnp.asarray(dists),
-                           jnp.int32(acc_wait), jnp.int32(mul_wait)))
+    return float(penalties_for_waits([(acc_wait, mul_wait)], mix)[0])
 
 
 # ---------------------------------------------------------------------------
 # Reference pipeline configurations of Fig. 2(c) (DP, 5-cycle units)
 # ---------------------------------------------------------------------------
+# DP CMA (paper Fig 2(b)): 2 mul + 2 add + round; bypass to adder => acc
+# wait = 2; bypass to multiplier => mul wait = 4.  FMA w/ forwarding saves
+# the rounding stage.
+_FIG2C_CONFIGS = (("dp_cma", 2, 4), ("fma5_fwd", 4, 4), ("fma5_nofwd", 5, 5))
+
+
 def fig2c_penalties(mix: SpecMix) -> dict:
     """Penalties for DP CMA vs 5-cycle FMA w/ and w/o forwarding."""
-    # DP CMA (paper Fig 2(b)): 2 mul + 2 add + round; bypass to adder => acc
-    # wait = 2; bypass to multiplier => mul wait = 4.
-    cma = dict(acc=2, mul=4)
-    fma_fwd = dict(acc=4, mul=4)  # un-rounded result forwarded (saves round)
-    fma_nofwd = dict(acc=5, mul=5)
-    out = {}
-    for name, w in (("dp_cma", cma), ("fma5_fwd", fma_fwd),
-                    ("fma5_nofwd", fma_nofwd)):
-        out[name] = penalty_from_waits(w["acc"], w["mul"], mix)
+    pens = penalties_for_waits([(a, m) for _, a, m in _FIG2C_CONFIGS], mix)
+    out = {name: float(p) for (name, _, _), p in zip(_FIG2C_CONFIGS, pens)}
     out["reduction_vs_fwd"] = 1.0 - out["dp_cma"] / out["fma5_fwd"]
     out["reduction_vs_nofwd"] = 1.0 - out["dp_cma"] / out["fma5_nofwd"]
     return out
 
 
+def fig2c_reductions_batch(mixes: Sequence[SpecMix]) -> np.ndarray:
+    """(len(mixes), 2) array of [reduction_vs_fwd, reduction_vs_nofwd].
+
+    All ``3 * len(mixes)`` trace simulations run in one double-vmapped
+    dispatch (traces x pipeline configurations).
+    """
+    traces = [m.sample() for m in mixes]
+    types = np.stack([t for t, _ in traces])
+    dists = np.stack([d for _, d in traces])
+    acc = jnp.asarray([a for _, a, _ in _FIG2C_CONFIGS], jnp.int32)
+    mul = jnp.asarray([m for _, _, m in _FIG2C_CONFIGS], jnp.int32)
+    pens = np.asarray(_simulate_traces_configs(
+        jnp.asarray(types), jnp.asarray(dists), acc, mul), np.float64)
+    return np.stack([1.0 - pens[:, 0] / pens[:, 1],
+                     1.0 - pens[:, 0] / pens[:, 2]], axis=1)
+
+
+_MIX_GRID = dict(p_acc=(0.15, 0.2, 0.25, 0.3, 0.35, 0.4),
+                 p_mul=(0.05, 0.08, 0.12, 0.16, 0.2),
+                 q_acc=(0.0, 0.15, 0.3),
+                 q_mul=(0.3, 0.45, 0.6))
+
+
 @functools.lru_cache(maxsize=1)
 def calibrated_spec_mix() -> SpecMix:
-    """Grid-search the mixture to hit the paper's 37%/57% reductions."""
-    best, best_err = None, np.inf
-    for p_acc in (0.15, 0.2, 0.25, 0.3, 0.35, 0.4):
-        for p_mul in (0.05, 0.08, 0.12, 0.16, 0.2):
-            for q_acc in (0.0, 0.15, 0.3):
-                for q_mul in (0.3, 0.45, 0.6):
-                    mix = SpecMix(p_acc, p_mul, q_acc, q_mul, n_ops=20_000)
-                    r = fig2c_penalties(mix)
-                    err = ((r["reduction_vs_fwd"] - 0.37) ** 2
-                           + (r["reduction_vs_nofwd"] - 0.57) ** 2)
-                    if err < best_err:
-                        best, best_err = mix, err
+    """Grid-search the mixture to hit the paper's 37%/57% reductions.
+
+    All 270 candidates (3 pipeline configurations each) are simulated in a
+    single batched dispatch; the argmin keeps the first-best candidate in
+    grid order, matching the original sequential search exactly.
+    """
+    import itertools
+    candidates = [SpecMix(p_acc, p_mul, q_acc, q_mul, n_ops=20_000)
+                  for p_acc, p_mul, q_acc, q_mul in itertools.product(
+                      _MIX_GRID["p_acc"], _MIX_GRID["p_mul"],
+                      _MIX_GRID["q_acc"], _MIX_GRID["q_mul"])]
+    red = fig2c_reductions_batch(candidates)
+    err = (red[:, 0] - 0.37) ** 2 + (red[:, 1] - 0.57) ** 2
+    best = candidates[int(np.argmin(err))]
     return dataclasses.replace(best, n_ops=50_000)
 
 

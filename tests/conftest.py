@@ -6,3 +6,36 @@ _SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                     "src")
 if _SRC not in sys.path:
     sys.path.insert(0, _SRC)
+
+# Some modules use hypothesis property tests.  hypothesis is a test extra
+# (see pyproject.toml); when it is absent, ignore those modules at collection
+# time instead of erroring the whole run.  Detection matches actual import
+# statements (not a bare substring, which would also hit docstrings) so a
+# new hypothesis-based module is guarded automatically.
+import re
+
+try:
+    import hypothesis  # noqa: F401
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+_IMPORTS_HYPOTHESIS = re.compile(r"^\s*(?:import|from)\s+hypothesis\b",
+                                 re.MULTILINE)
+_HERE = os.path.dirname(os.path.abspath(__file__))
+collect_ignore = []
+if not _HAVE_HYPOTHESIS:
+    for _name in sorted(os.listdir(_HERE)):
+        if not (_name.startswith("test_") and _name.endswith(".py")):
+            continue
+        with open(os.path.join(_HERE, _name)) as _f:
+            if _IMPORTS_HYPOTHESIS.search(_f.read()):
+                collect_ignore.append(_name)
+
+
+def pytest_report_header(config):
+    if collect_ignore:
+        return (f"hypothesis not installed: ignoring "
+                f"{len(collect_ignore)} module(s): "
+                + ", ".join(collect_ignore))
+    return None

@@ -1,0 +1,223 @@
+"""Vectorized DSE pipeline: SweepResult / predict_batch / batched latency
+penalties must be element-wise identical to the legacy per-point loop, and
+pareto_mask must satisfy its domination/tie invariants.
+
+Deliberately hypothesis-free (randomized cases use seeded numpy) so it runs
+under the bare tier-1 environment.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import latency_sim
+from repro.core.dse import (DEFAULT_VBB_GRID, DEFAULT_VDD_GRID,
+                            enumerate_structures, latency_pareto,
+                            pareto_mask, sweep, sweep_arrays, sweep_loop,
+                            throughput_pareto)
+from repro.core.energy_model import (METRIC_KEYS, calibrate, feature_matrix,
+                                     predict, predict_batch, predict_points)
+from repro.core.fpu_arch import FABRICATED, TABLE_I
+from repro.core.latency_sim import (SpecMix, _simulate,
+                                    fig2c_penalties, fig2c_reductions_batch,
+                                    penalties_for_waits)
+
+SMALL_VDD = np.round(np.arange(0.6, 1.11, 0.1), 3)
+SMALL_VBB = np.round(np.arange(0.0, 1.21, 0.6), 2)
+MIX = SpecMix(0.3, 0.1, 0.2, 0.5, n_ops=2000)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return calibrate()
+
+
+@pytest.fixture(scope="module")
+def designs():
+    return enumerate_structures("sp")[:5] + enumerate_structures("dp")[-5:]
+
+
+# ------------------------------------------------------------- energy model
+def test_feature_matrix_shapes(designs):
+    feats, depths, is_cma = feature_matrix(designs)
+    assert feats.shape == (len(designs), 5)
+    assert depths.shape == is_cma.shape == (len(designs),)
+    assert is_cma.dtype == bool
+
+
+def test_predict_batch_numpy_bitwise_vs_grid(params, designs):
+    from repro.core.energy_model import predict_grid
+    out = predict_batch(designs, params, SMALL_VDD, SMALL_VBB,
+                        backend="numpy")
+    vv, bb = np.meshgrid(SMALL_VDD, SMALL_VBB, indexing="ij")
+    for i, d in enumerate(designs):
+        grid = predict_grid(d, params, vv, bb)
+        for k in METRIC_KEYS:
+            assert np.array_equal(out[k][i], grid[k]), (d.name, k)
+
+
+def test_predict_batch_jax_matches_numpy(params, designs):
+    outj = predict_batch(designs, params, SMALL_VDD, SMALL_VBB)
+    outn = predict_batch(designs, params, SMALL_VDD, SMALL_VBB,
+                         backend="numpy")
+    for k in METRIC_KEYS:
+        np.testing.assert_allclose(outj[k], outn[k], rtol=1e-12, atol=0)
+
+
+def test_predict_points_matches_predict(params):
+    ds = list(FABRICATED.values())
+    for anchored in (False, True):
+        pts = predict_points(ds, params,
+                             vdd=[TABLE_I[d.name].vdd for d in ds],
+                             vbb=[TABLE_I[d.name].vbb for d in ds],
+                             anchored=anchored)
+        for i, d in enumerate(ds):
+            m = TABLE_I[d.name]
+            ref = predict(d, params, vdd=m.vdd, vbb=m.vbb, anchored=anchored)
+            for k in METRIC_KEYS:
+                np.testing.assert_allclose(pts[k][i], ref[k], rtol=1e-12,
+                                           err_msg=f"{d.name}/{k}")
+
+
+# ------------------------------------------------------------------- sweep
+@pytest.mark.parametrize("with_latency", [False, True])
+def test_sweep_arrays_identical_to_legacy_loop(params, designs, with_latency):
+    legacy = sweep_loop(designs, params, SMALL_VDD, SMALL_VBB,
+                        mix=MIX, with_latency=with_latency)
+    res = sweep_arrays(designs, params, SMALL_VDD, SMALL_VBB,
+                       mix=MIX, with_latency=with_latency, backend="numpy")
+    assert len(legacy) == len(res)
+    assert list(legacy[0].metrics) == list(res.metrics)
+    for i, p in enumerate(legacy):
+        assert p.design is res.design_of(i)
+        assert p.vdd == res.vdd[i] and p.vbb == res.vbb[i]
+        for k, v in p.metrics.items():
+            assert v == res.metrics[k][i], (i, k)
+
+
+def test_sweep_adapter_returns_equivalent_points(params, designs):
+    res = sweep_arrays(designs, params, SMALL_VDD, SMALL_VBB)
+    pts = sweep(designs, params, SMALL_VDD, SMALL_VBB)
+    assert len(pts) == len(res)
+    for i, p in enumerate(pts):
+        assert p.key == res.point(i).key
+        assert p.metrics == res.point(i).metrics
+
+
+def test_sweep_arrays_jax_close_to_numpy(params, designs):
+    rj = sweep_arrays(designs, params, SMALL_VDD, SMALL_VBB, mix=MIX,
+                      with_latency=True)
+    rn = sweep_arrays(designs, params, SMALL_VDD, SMALL_VBB, mix=MIX,
+                      with_latency=True, backend="numpy")
+    assert len(rj) == len(rn)
+    for k in rj.metrics:
+        np.testing.assert_allclose(rj.metrics[k], rn.metrics[k],
+                                   rtol=1e-12, atol=0)
+
+
+def test_pareto_on_sweepresult_matches_point_list(params, designs):
+    res = sweep_arrays(designs, params, SMALL_VDD, SMALL_VBB, mix=MIX,
+                       with_latency=True, backend="numpy")
+    pts = res.to_points()
+    for fn in (throughput_pareto, latency_pareto):
+        front_arr = fn(res)
+        front_pts = fn(pts)
+        keys_arr = {front_arr.point(i).key for i in range(len(front_arr))}
+        keys_pts = {p.key for p in front_pts}
+        assert keys_arr == keys_pts
+
+
+def test_best_design_selection_consistent(params, designs):
+    res = sweep_arrays(designs, params, SMALL_VDD, SMALL_VBB, mix=MIX,
+                       with_latency=True, backend="numpy")
+    pts = res.to_points()
+    score = [p.metrics["gflops_per_w"] * p.metrics["gflops_per_mm2"]
+             for p in pts]
+    assert res.argbest_throughput() == int(np.argmax(score))
+    edp = [p.metrics["e_per_flop_pj"] * p.metrics["avg_delay_ns"]
+           for p in pts]
+    assert res.argbest_latency() == int(np.argmin(edp))
+
+
+# ------------------------------------------------------------- pareto_mask
+def _dominated(xs, ys, i):
+    """Strict Pareto domination of point i by any other point."""
+    return bool(np.any((xs <= xs[i]) & (ys <= ys[i])
+                       & ((xs < xs[i]) | (ys < ys[i]))))
+
+
+def test_pareto_mask_reference_case():
+    xs = np.array([1.0, 2.0, 0.5, 3.0])
+    ys = np.array([1.0, 0.5, 2.0, 3.0])
+    assert pareto_mask(xs, ys).tolist() == [True, True, True, False]
+
+
+def test_pareto_mask_invariants_randomized():
+    rng = np.random.default_rng(42)
+    for trial in range(30):
+        n = int(rng.integers(2, 60))
+        xs = rng.choice([0.1, 0.25, 0.5, 1.0, 2.0], n) \
+            if trial % 3 == 0 else rng.uniform(0.1, 10, n)
+        ys = rng.choice([0.1, 0.25, 0.5, 1.0, 2.0], n) \
+            if trial % 3 == 0 else rng.uniform(0.1, 10, n)
+        mask = pareto_mask(xs, ys)
+        assert mask.any()
+        for i in range(n):
+            if mask[i]:  # no kept point is dominated
+                assert not _dominated(xs, ys, i), (trial, i)
+            else:  # every dropped point is dominated by someone
+                assert _dominated(xs, ys, i), (trial, i)
+
+
+def test_pareto_mask_keeps_exact_duplicates():
+    xs = np.array([1.0, 1.0, 2.0, 1.0])
+    ys = np.array([1.0, 1.0, 0.5, 2.0])
+    assert pareto_mask(xs, ys).tolist() == [True, True, True, False]
+
+
+def test_pareto_mask_permutation_invariant():
+    rng = np.random.default_rng(7)
+    xs = np.repeat(rng.uniform(0.1, 10, 20), 2)  # force ties
+    ys = np.repeat(rng.uniform(0.1, 10, 20), 2)
+    mask = pareto_mask(xs, ys)
+    perm = rng.permutation(xs.size)
+    mask_p = pareto_mask(xs[perm], ys[perm])
+    assert np.array_equal(mask_p, mask[perm])
+
+
+def test_pareto_mask_empty():
+    assert pareto_mask(np.array([]), np.array([])).shape == (0,)
+
+
+# -------------------------------------------------------------- latency sim
+def test_penalties_for_waits_matches_individual_simulate():
+    types, dists = MIX.sample()
+    pairs = [(2, 4), (4, 4), (5, 5), (1, 2)]
+    batch = penalties_for_waits(pairs, MIX)
+    for (a, m), got in zip(pairs, batch):
+        ref = float(_simulate(jnp.asarray(types), jnp.asarray(dists),
+                              jnp.int32(a), jnp.int32(m)))
+        assert got == ref, (a, m)
+
+
+def test_penalty_cache_hit():
+    latency_sim.clear_penalty_cache()
+    first = penalties_for_waits([(3, 5)], MIX)
+    assert ((3, 5), MIX) in latency_sim._PENALTY_CACHE
+    again = penalties_for_waits([(3, 5)], MIX)
+    assert first[0] == again[0]
+
+
+def test_fig2c_batch_matches_sequential():
+    mixes = [SpecMix(p, 0.1, 0.2, 0.5, n_ops=1500) for p in (0.2, 0.35)]
+    batch = fig2c_reductions_batch(mixes)
+    for row, mix in zip(batch, mixes):
+        r = fig2c_penalties(mix)
+        assert row[0] == r["reduction_vs_fwd"]
+        assert row[1] == r["reduction_vs_nofwd"]
+
+
+def test_default_grids_unchanged():
+    # the seed's electrical grid is part of the figures' definition
+    assert DEFAULT_VDD_GRID[0] == 0.5 and DEFAULT_VDD_GRID[-1] == 1.15
+    assert DEFAULT_VBB_GRID[0] == 0.0 and DEFAULT_VBB_GRID[-1] == 1.2
