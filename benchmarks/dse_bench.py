@@ -9,8 +9,6 @@ backend) and identical Pareto frontiers, and appends one record to the
 
 Run: PYTHONPATH=src python benchmarks/dse_bench.py
 """
-import json
-import os
 import time
 
 import numpy as np
@@ -21,10 +19,7 @@ from repro.core.dse import (enumerate_structures, latency_pareto,
 from repro.core.energy_model import calibrate
 from repro.core.latency_sim import calibrated_spec_mix
 
-from bench_lib import emit, timed
-
-_RESULTS = os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "results")
+from bench_lib import append_trajectory, emit, timed
 
 
 def _frontier_keys(obj):
@@ -32,19 +27,6 @@ def _frontier_keys(obj):
         return {(p.design.name, p.vdd, p.vbb) for p in obj}
     return {(obj.design_of(i).name, float(obj.vdd[i]), float(obj.vbb[i]))
             for i in range(len(obj))}
-
-
-def _append_trajectory(record):
-    os.makedirs(_RESULTS, exist_ok=True)
-    path = os.path.join(_RESULTS, "dse_bench.json")
-    rows = []
-    if os.path.exists(path):
-        with open(path) as f:
-            rows = json.load(f)
-    rows.append(record)
-    with open(path, "w") as f:
-        json.dump(rows, f, indent=1)
-    return path
 
 
 def run():
@@ -115,7 +97,7 @@ def run():
          f"throughput_pareto_identical={tp_same};"
          f"latency_pareto_identical={lp_same}")
 
-    path = _append_trajectory(dict(
+    path = append_trajectory("dse_bench.json", dict(
         ts=time.strftime("%Y-%m-%dT%H:%M:%S"),
         n_points=n,
         legacy_s=legacy_us / 1e6,

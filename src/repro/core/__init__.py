@@ -5,6 +5,8 @@ softfloat.py        — bit-exact FMA/CMA semantics (fused vs cascade vs fwd)
 fpu_arch.py         — FPGen microarchitecture design space (FPUDesign)
 energy_model.py     — analytical energy/area/delay model calibrated to Table I
 dse.py              — design-space explorer + Pareto frontiers (Fig. 3/4)
+objective.py        — shared objective/constraint API (argbest, Pareto axes)
+autotune.py         — workload-aware autotuner over SweepResult (Table I)
 latency_sim.py      — dependency-trace average-latency-penalty simulator (Fig. 2c)
 body_bias.py        — static/adaptive body-bias energy policies (Fig. 4)
 precision_policy.py — workload -> FPU design selection, framework integration

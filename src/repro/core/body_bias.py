@@ -39,15 +39,53 @@ def iso_frequency_vdd(design: FPUDesign, params: TechParams,
     return 0.5 * (lo + hi)
 
 
+def energy_per_flop(e_op_pj, p_leak_active_mw, freq_ghz, util,
+                    p_leak_idle_mw=None, penalty=0.0):
+    """Array-native pJ/FLOP at an activity level — the one activity/leakage
+    accounting shared by ``energy_per_op``, the Fig. 4 curves, and the
+    workload autotuner (all arguments broadcast).
+
+    The unit is busy a fraction ``util`` of wall-clock; dynamic energy
+    accrues per op, leakage accrues over wall-clock.  ``p_leak_idle_mw``
+    models adaptive BB: during idle periods V_t is raised (bias removed) —
+    UTBB FDSOI body bias slews fast enough to track phase-level activity
+    (paper §Measurement).  ``penalty`` is the average stall cycles per op on
+    the workload's dependency mixture: stalls stretch the busy phase at
+    *active* leakage, i.e. the effective issue rate drops to
+    ``freq / (1 + penalty)``.
+    """
+    e_dyn = np.asarray(e_op_pj, np.float64) / 2.0  # per FLOP (2 FLOP/FMAC)
+    p_act = np.asarray(p_leak_active_mw, np.float64)
+    p_idle = p_act if p_leak_idle_mw is None \
+        else np.asarray(p_leak_idle_mw, np.float64)
+    f_eff = np.asarray(freq_ghz, np.float64) / (1.0 + np.asarray(penalty))
+    # wall-clock per FLOP = 1 / (2 f_eff util); active fraction util
+    e_leak = (p_act * util + p_idle * (1.0 - util)) / (
+        2.0 * f_eff * util)  # mW / GHz = pJ
+    return e_dyn + e_leak
+
+
+def leak_bb_scale(params: TechParams, vbb_from, vbb_to):
+    """Leakage multiplier for a body-bias move at fixed V_DD.
+
+    In the electrical model leakage depends on V_BB only through
+    V_t = vt0 - k_bb * vbb and the subthreshold slope:
+    p_leak ∝ 10^(-V_t / s_leak_dec), so the ratio is closed-form — the
+    autotuner uses it to derive idle-leakage columns for a whole sweep
+    without a second batched dispatch.  Anchored per-design leak corrections
+    are multiplicative and cancel in the ratio.
+    """
+    return 10.0 ** (params.k_bb * (np.asarray(vbb_to, np.float64)
+                                   - np.asarray(vbb_from, np.float64))
+                    / params.s_leak_dec)
+
+
 def energy_per_op(design: FPUDesign, params: TechParams, *,
                   vdd: float, vbb_active: float, vbb_idle: float | None,
                   util: float) -> Dict[str, float]:
-    """pJ/FLOP at a utilization level.
+    """pJ/FLOP at a utilization level (scalar, single design/point).
 
-    The unit is busy a fraction ``util`` of wall-clock; dynamic energy accrues
-    per op, leakage accrues over wall-clock.  vbb_idle!=None models adaptive
-    BB: during idle periods V_t is raised (bias removed) — UTBB FDSOI body
-    bias slews fast enough to track phase-level activity (paper §Measurement).
+    Thin wrapper over ``energy_per_flop`` — see there for the model.
     """
     p = predict(design, params, vdd=vdd, vbb=vbb_active)
     f = p["freq_ghz"]
@@ -58,11 +96,10 @@ def energy_per_op(design: FPUDesign, params: TechParams, *,
     else:
         leak_idle_mw = predict(design, params, vdd=vdd, vbb=vbb_idle)[
             "p_leak_mw"]
-    # wall-clock per FLOP = 1 / (2 f util); active fraction util
-    e_leak = (leak_active_mw * util + leak_idle_mw * (1 - util)) / (
-        2.0 * f * util)  # mW / GHz = pJ
-    return dict(e_dyn_pj=e_dyn, e_leak_pj=e_leak, e_total_pj=e_dyn + e_leak,
-                freq_ghz=f)
+    e_total = float(energy_per_flop(p["e_op_pj"], leak_active_mw, f, util,
+                                    p_leak_idle_mw=leak_idle_mw))
+    return dict(e_dyn_pj=e_dyn, e_leak_pj=e_total - e_dyn,
+                e_total_pj=e_total, freq_ghz=f)
 
 
 def bb_study(design: FPUDesign, params: TechParams | None = None,
@@ -114,9 +151,8 @@ def energy_vs_utilization(design: FPUDesign, params: TechParams | None = None,
                        else np.geomspace(0.01, 1.0, 25), np.float64)
     p = predict(design, params, vdd=design.vdd, vbb=1.2)
     p_idle = predict(design, params, vdd=design.vdd, vbb=0.0)
-    e_dyn = p["e_op_pj"] / 2.0  # per FLOP (2 FLOP per FMAC op)
-    leak_active, leak_idle = p["p_leak_mw"], p_idle["p_leak_mw"]
-    denom = 2.0 * p["freq_ghz"] * utils
-    static = e_dyn + (leak_active * utils + leak_active * (1 - utils)) / denom
-    adaptive = e_dyn + (leak_active * utils + leak_idle * (1 - utils)) / denom
+    static = energy_per_flop(p["e_op_pj"], p["p_leak_mw"], p["freq_ghz"],
+                             utils)
+    adaptive = energy_per_flop(p["e_op_pj"], p["p_leak_mw"], p["freq_ghz"],
+                               utils, p_leak_idle_mw=p_idle["p_leak_mw"])
     return utils, static, adaptive

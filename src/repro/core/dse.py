@@ -25,8 +25,9 @@ from typing import Dict, Iterable, List, Sequence, Union
 
 import numpy as np
 
-from repro.core.energy_model import (TechParams, calibrate, predict_batch,
-                                     predict_grid)
+from repro.core import objective as obj
+from repro.core.energy_model import (SweepExecutableCache, TechParams,
+                                     calibrate, predict_batch, predict_grid)
 from repro.core.fpu_arch import BOOTH_RADICES, TREES, FPUDesign
 from repro.core.latency_sim import (SpecMix, average_latency_penalty,
                                     calibrated_spec_mix, penalties_for_waits)
@@ -35,28 +36,53 @@ from repro.core.latency_sim import (SpecMix, average_latency_penalty,
 # ---------------------------------------------------------------------------
 # Enumeration
 # ---------------------------------------------------------------------------
-def enumerate_structures(precision: str,
-                         styles: Sequence[str] = ("fma", "cma"),
-                         ) -> List[FPUDesign]:
-    """All structural design points for one precision."""
+def _enumerate(precision: str, styles: Sequence[str],
+               fma_stages: Sequence[int],
+               cma_partitions: Sequence[tuple],
+               fwd_options: Sequence[bool]) -> List[FPUDesign]:
     out: List[FPUDesign] = []
     for style in styles:
         for booth, tree in itertools.product(BOOTH_RADICES, TREES):
-            if style == "fma":
-                for stages in range(3, 8):
-                    out.append(FPUDesign(
-                        precision, "fma", stages=stages,
-                        mul_stages=max(stages - 2, 1), add_stages=0,
-                        booth=booth, tree=tree,
-                        name=f"{precision}_fma_s{stages}_b{booth}_{tree}"))
-            else:
-                for mul_s, add_s in itertools.product((2, 3), (1, 2, 3)):
-                    stages = mul_s + add_s + 1
-                    out.append(FPUDesign(
-                        precision, "cma", stages=stages, mul_stages=mul_s,
-                        add_stages=add_s, booth=booth, tree=tree,
-                        name=f"{precision}_cma_m{mul_s}a{add_s}_b{booth}_{tree}"))
+            for fwd in fwd_options:
+                nf = "" if fwd else "_nf"
+                if style == "fma":
+                    for stages in fma_stages:
+                        out.append(FPUDesign(
+                            precision, "fma", stages=stages,
+                            mul_stages=max(stages - 2, 1), add_stages=0,
+                            booth=booth, tree=tree, forwarding=fwd,
+                            name=f"{precision}_fma_s{stages}_b{booth}"
+                                 f"_{tree}{nf}"))
+                else:
+                    for mul_s, add_s in cma_partitions:
+                        out.append(FPUDesign(
+                            precision, "cma", stages=mul_s + add_s + 1,
+                            mul_stages=mul_s, add_stages=add_s,
+                            booth=booth, tree=tree, forwarding=fwd,
+                            name=f"{precision}_cma_m{mul_s}a{add_s}"
+                                 f"_b{booth}_{tree}{nf}"))
     return out
+
+
+def enumerate_structures(precision: str,
+                         styles: Sequence[str] = ("fma", "cma"),
+                         ) -> List[FPUDesign]:
+    """All structural design points for one precision (the Fig. 3/4 space)."""
+    return _enumerate(precision, styles, range(3, 8),
+                      tuple(itertools.product((2, 3), (1, 2, 3))), (True,))
+
+
+def enumerate_structures_full(precision: str,
+                              styles: Sequence[str] = ("fma", "cma"),
+                              ) -> List[FPUDesign]:
+    """The expanded autotuner enumeration: a strict superset of
+    ``enumerate_structures`` with wider pipeline partitions (FMA 2-9 stages,
+    CMA up to 4+4) and no-forwarding variants — ~4x the default structural
+    space, affordable now that sweep points are ~free (PR 1) and the
+    compile is amortized across sweeps (``SweepExecutableCache``)."""
+    return _enumerate(precision, styles, range(2, 10),
+                      tuple(itertools.product((1, 2, 3, 4), (1, 2, 3, 4))),
+                      (True, False))
 
 
 DEFAULT_VDD_GRID = np.round(np.arange(0.50, 1.151, 0.05), 3)
@@ -125,22 +151,27 @@ class SweepResult:
                            {k: v[mask] for k, v in self.metrics.items()})
 
     # -- vectorized objective extraction ----------------------------------
+    # All selection routes through repro.core.objective so the tuner,
+    # benchmarks, and figures share one objective/constraint definition.
+    def pareto_mask_for(self, axes: obj.ParetoAxes) -> np.ndarray:
+        xs, ys = obj.axis_costs(self.metrics, axes)
+        return pareto_mask(xs, ys)
+
     def throughput_pareto_mask(self) -> np.ndarray:
-        return pareto_mask(-self.metrics["gflops_per_w"],
-                           -self.metrics["gflops_per_mm2"])
+        return self.pareto_mask_for(obj.THROUGHPUT_AXES)
 
     def latency_pareto_mask(self) -> np.ndarray:
-        return pareto_mask(self.metrics["e_per_flop_pj"],
-                           self.metrics["avg_delay_ns"])
+        return self.pareto_mask_for(obj.LATENCY_AXES)
+
+    def argbest(self, objective: obj.Objective,
+                constraints: Sequence[obj.Constraint] = ()) -> int:
+        return obj.argbest(self.metrics, objective, constraints)
 
     def argbest_throughput(self, weight_area: float = 1.0) -> int:
-        score = (self.metrics["gflops_per_w"]
-                 * self.metrics["gflops_per_mm2"] ** weight_area)
-        return int(np.argmax(score))
+        return self.argbest(obj.throughput_objective(weight_area))
 
     def argbest_latency(self) -> int:
-        score = self.metrics["e_per_flop_pj"] * self.metrics["avg_delay_ns"]
-        return int(np.argmin(score))
+        return self.argbest(obj.LATENCY)
 
 
 def sweep_arrays(designs: Iterable[FPUDesign],
@@ -150,17 +181,35 @@ def sweep_arrays(designs: Iterable[FPUDesign],
                  util: float = 1.0,
                  mix: SpecMix | None = None,
                  with_latency: bool = False,
-                 backend: str = "jax") -> SweepResult:
-    """Evaluate every (structure x voltage) point in one batched dispatch."""
+                 backend: str = "jax",
+                 anchored: bool = False,
+                 cache: SweepExecutableCache | None = None) -> SweepResult:
+    """Evaluate every (structure x voltage) point in one batched dispatch.
+
+    ``anchored=True`` applies the per-fabricated-design silicon corrections
+    (exact at the Table I operating points).  ``cache`` routes the jax
+    backend through AOT-compiled executables reused across same-shape
+    sweeps.
+    """
     designs = list(designs)
     params = params or calibrate()
     vdd_grid = np.asarray(vdd_grid, np.float64).ravel()
     vbb_grid = np.asarray(vbb_grid, np.float64).ravel()
     tensor = predict_batch(designs, params, vdd_grid, vbb_grid, util=util,
-                           backend=backend)
+                           backend=backend, anchored=anchored, cache=cache)
     valid = (tensor["freq_ghz"] > 0) & np.isfinite(tensor["p_total_mw"])
-    didx, vi, bi = np.nonzero(valid)  # C-order: design-major, vdd, vbb
-    metrics = {k: v[didx, vi, bi] for k, v in tensor.items()}
+    if valid.all():
+        # fast path (the common case): C-order flatten is element-wise
+        # identical to nonzero + fancy indexing but copy-free
+        nd, nv, nb = valid.shape
+        didx = np.repeat(np.arange(nd), nv * nb)
+        vi = np.tile(np.repeat(np.arange(nv), nb), nd)
+        bi = np.tile(np.arange(nb), nd * nv)
+        metrics = {k: np.ascontiguousarray(v).reshape(-1)
+                   for k, v in tensor.items()}
+    else:
+        didx, vi, bi = np.nonzero(valid)  # C-order: design-major, vdd, vbb
+        metrics = {k: v[didx, vi, bi] for k, v in tensor.items()}
     res = SweepResult(designs, didx, vdd_grid[vi], vbb_grid[bi], metrics)
     if with_latency:
         mix = mix or calibrated_spec_mix()

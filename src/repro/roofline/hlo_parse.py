@@ -81,6 +81,65 @@ class Computation:
     result_types: Dict[str, str]
 
 
+def _operand_region(rhs_after: str) -> str:
+    """Text inside the instruction's operand parentheses (bracket-aware)."""
+    i = rhs_after.find("(")
+    if i < 0:
+        return ""
+    depth = 0
+    for j in range(i, len(rhs_after)):
+        ch = rhs_after[j]
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return rhs_after[i + 1:j]
+    return rhs_after[i + 1:]
+
+
+def _split_top(s: str) -> List[str]:
+    """Split on commas outside (), {}, [] — operand layouts like
+    ``f32[128,2048]{1,0}`` contain commas the naive split would break on."""
+    out, depth, start = [], 0, 0
+    for i, ch in enumerate(s):
+        if ch in "({[":
+            depth += 1
+        elif ch in ")}]":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            out.append(s[start:i])
+            start = i + 1
+    tail = s[start:]
+    if tail.strip():
+        out.append(tail)
+    return out
+
+
+_OPERAND_NAME = re.compile(r"%?([\w.\-]+)\s*$")
+
+
+def _operand_infos(rhs_after: str, result_types: Dict[str, str]
+                   ) -> List[Tuple[str, str]]:
+    """(name, type_text) per operand.
+
+    Newer HLO dumps annotate operands inline (``f32[2048]{1,0} %arg``); older
+    ones print bare names — fall back to the producing instruction's result
+    type in that case.
+    """
+    infos: List[Tuple[str, str]] = []
+    for entry in _split_top(_operand_region(rhs_after)):
+        entry = entry.strip()
+        if not entry:
+            continue
+        nm = _OPERAND_NAME.search(entry)
+        name = nm.group(1) if nm else entry.lstrip("%")
+        typ = entry if _SHAPE_TOKEN.search(entry) else \
+            result_types.get(name, "")
+        infos.append((name, typ))
+    return infos
+
+
 def _dot_flops(rhs: str, result_types: Dict[str, str]) -> float:
     """2 * prod(result dims) * prod(contracting dims of lhs)."""
     res_region = _result_type_region(rhs)
@@ -91,12 +150,8 @@ def _dot_flops(rhs: str, result_types: Dict[str, str]) -> float:
     for d in m.group(2).split(","):
         if d:
             out_elems *= int(d)
-    # operands
-    ops = re.search(r"\(([^)]*)\)", rhs[len(res_region):])
-    if not ops:
-        return 0.0
-    operands = [o.strip().lstrip("%") for o in ops.group(1).split(",")]
-    lhs_type = result_types.get(operands[0], "") if operands else ""
+    operands = _operand_infos(rhs[len(res_region):], result_types)
+    lhs_type = operands[0][1] if operands else ""
     ml = _SHAPE_TOKEN.search(lhs_type)
     if not ml:
         return 0.0
@@ -119,13 +174,10 @@ def _conv_flops(rhs: str, result_types: Dict[str, str]) -> float:
     for d in m.group(2).split(","):
         if d:
             out_elems *= int(d)
-    ops = re.search(r"\(([^)]*)\)", rhs[len(res_region):])
-    if not ops:
-        return 0.0
-    operands = [o.strip().lstrip("%") for o in ops.group(1).split(",")]
+    operands = _operand_infos(rhs[len(res_region):], result_types)
     if len(operands) < 2:
         return 0.0
-    ker_type = result_types.get(operands[1], "")
+    ker_type = operands[1][1]
     mk = _SHAPE_TOKEN.search(ker_type)
     if not mk:
         return 0.0
@@ -236,26 +288,16 @@ def _fusion_called(comps: Dict[str, Computation]) -> set:
 def _update_operand_bytes(ins: Instr, comp: Computation) -> int:
     """Bytes of the update (2nd) operand of a dynamic-update-slice."""
     rhs_after = ins.rhs[len(_result_type_region(ins.rhs)):]
-    ops = re.search(r"\(([^)]*)\)", rhs_after)
-    if not ops:
-        return 0
-    names = [o.strip().lstrip("%") for o in ops.group(1).split(",")]
-    if len(names) >= 2 and names[1] in comp.result_types:
-        return _shape_bytes(comp.result_types[names[1]])
+    operands = _operand_infos(rhs_after, comp.result_types)
+    if len(operands) >= 2:
+        return _shape_bytes(operands[1][1])
     return 0
 
 
 def _operand_bytes(ins: Instr, comp: Computation) -> int:
     rhs_after = ins.rhs[len(_result_type_region(ins.rhs)):]
-    ops = re.search(r"\(([^)]*)\)", rhs_after)
-    if not ops:
-        return 0
-    total = 0
-    for o in ops.group(1).split(","):
-        o = o.strip().lstrip("%")
-        if o in comp.result_types:
-            total += _shape_bytes(comp.result_types[o])
-    return total
+    return sum(_shape_bytes(typ) for _, typ in
+               _operand_infos(rhs_after, comp.result_types))
 
 
 def analyze_hlo(text: str) -> HloCost:

@@ -1,0 +1,136 @@
+"""Golden regression tests: the four fabricated FPMax units vs the paper's
+Table I / Table II silicon numbers.
+
+Tolerance derivation (the "stated tolerances" of these goldens):
+
+  * ANCHOR_RTOL = 1e-6 — anchored mode applies per-design multiplicative
+    corrections computed *from* the Table I rows, so freq / leak / total
+    power / area are exact at the measured operating points by construction;
+    the tolerance only absorbs float round-trips.
+  * QUOTE_RTOL = 0.05 — Table I's GFLOPS/W and GFLOPS/mm^2 are quoted
+    normalized and rounded to 3 significant digits, and are not exactly
+    self-consistent with the quoted freq/power/area (recomputing
+    2f/P from the table's own numbers lands within ~4%% of the quoted
+    efficiency for sp_fma).  5%% bounds the quoting slack without masking a
+    real model regression.
+  * DELAY_RTOL = 0.30 — the SPEC-like mixture is calibrated to Fig. 2(c)'s
+    *relative* penalty reductions (37%% / 57%%), not to absolute delays; the
+    resulting absolute average delays land 9-22%% below the Table I
+    normalized delays across all four units.  30%% pins that envelope.
+  * Global-fit (non-anchored) residual envelope: measured on the seed
+    calibration — freq within 29%%, total power within 12%%, area within
+    30%%, efficiencies within 18%% (GFLOPS/W) / 45%% (GFLOPS/mm^2).  The
+    bounds below add a small margin so a *worse* fit fails while optimizer
+    jitter does not.
+"""
+import numpy as np
+import pytest
+
+from repro.core.dse import sweep_arrays
+from repro.core.energy_model import (calibrate, calibration_report, predict,
+                                     predict_points)
+from repro.core.fpu_arch import FABRICATED, TABLE_I
+from repro.core.latency_sim import calibrated_spec_mix
+
+ANCHOR_RTOL = 1e-6
+QUOTE_RTOL = 0.05
+DELAY_RTOL = 0.30
+
+
+@pytest.fixture(scope="module")
+def params():
+    return calibrate()
+
+
+@pytest.fixture(scope="module")
+def mix():
+    return calibrated_spec_mix()
+
+
+@pytest.mark.parametrize("name", sorted(FABRICATED))
+def test_anchored_point_predictions_are_silicon_exact(params, name):
+    d, m = FABRICATED[name], TABLE_I[name]
+    p = predict(d, params, vdd=m.vdd, vbb=m.vbb, anchored=True)
+    np.testing.assert_allclose(p["freq_ghz"], m.freq_ghz, rtol=ANCHOR_RTOL)
+    np.testing.assert_allclose(p["p_leak_mw"], m.leak_mw, rtol=ANCHOR_RTOL)
+    np.testing.assert_allclose(p["p_total_mw"], m.power_mw, rtol=ANCHOR_RTOL)
+    np.testing.assert_allclose(p["area_mm2"], m.area_mm2, rtol=ANCHOR_RTOL)
+
+
+@pytest.mark.parametrize("name", sorted(FABRICATED))
+def test_anchored_efficiencies_match_table1_quotes(params, name):
+    d, m = FABRICATED[name], TABLE_I[name]
+    p = predict(d, params, vdd=m.vdd, vbb=m.vbb, anchored=True)
+    np.testing.assert_allclose(p["gflops_per_w"], m.gflops_per_w,
+                               rtol=QUOTE_RTOL)
+    np.testing.assert_allclose(p["gflops_per_mm2"], m.gflops_per_mm2,
+                               rtol=QUOTE_RTOL)
+
+
+def test_anchored_sweep_rows_pin_table1(params, mix):
+    """The SweepResult pipeline (not just scalar predict) reproduces the
+    silicon: sweep the four units over grids containing their measured
+    operating points with the calibrated mixture and check every Table I
+    row — efficiencies at quote tolerance, average benchmarked delay vs the
+    table's normalized delay at the mixture-calibration tolerance."""
+    designs = list(FABRICATED.values())
+    vdds = sorted({TABLE_I[d.name].vdd for d in designs})
+    res = sweep_arrays(designs, params, np.asarray(vdds), np.asarray([1.2]),
+                       mix=mix, with_latency=True, anchored=True)
+    for i, d in enumerate(designs):
+        m = TABLE_I[d.name]
+        rows = np.nonzero((res.design_index == i) & (res.vdd == m.vdd)
+                          & (res.vbb == 1.2))[0]
+        assert rows.size == 1, d.name
+        r = int(rows[0])
+        np.testing.assert_allclose(res.metrics["freq_ghz"][r], m.freq_ghz,
+                                   rtol=ANCHOR_RTOL, err_msg=d.name)
+        np.testing.assert_allclose(res.metrics["gflops_per_w"][r],
+                                   m.gflops_per_w, rtol=QUOTE_RTOL,
+                                   err_msg=d.name)
+        np.testing.assert_allclose(res.metrics["gflops_per_mm2"][r],
+                                   m.gflops_per_mm2, rtol=QUOTE_RTOL,
+                                   err_msg=d.name)
+        np.testing.assert_allclose(res.metrics["avg_delay_ns"][r],
+                                   m.norm_delay_ns, rtol=DELAY_RTOL,
+                                   err_msg=d.name)
+
+
+def test_global_fit_residuals_within_stated_envelope(params):
+    rep = calibration_report(params)
+    for name, row in rep.items():
+        assert abs(row["freq_rel_err"]) <= 0.32, (name, row)
+        assert abs(row["power_rel_err"]) <= 0.15, (name, row)
+        assert abs(row["area_rel_err"]) <= 0.33, (name, row)
+        gw = row["gflops_per_w_pred"] / row["gflops_per_w_meas"] - 1.0
+        gm = row["gflops_per_mm2_pred"] / row["gflops_per_mm2_meas"] - 1.0
+        assert abs(gw) <= 0.20, (name, gw)
+        assert abs(gm) <= 0.48, (name, gm)
+
+
+def test_table2_sp_fma_row_anchored(params):
+    """Table II quotes our SP FMA at 217 GFLOPS/mm^2 / 106 GFLOPS/W; the
+    anchored batched path must land on the quoted row."""
+    d = FABRICATED["sp_fma"]
+    m = TABLE_I["sp_fma"]
+    p = predict_points([d], params, vdd=[m.vdd], vbb=[m.vbb], anchored=True)
+    np.testing.assert_allclose(p["gflops_per_mm2"][0], 217.0,
+                               rtol=QUOTE_RTOL)
+    np.testing.assert_allclose(p["gflops_per_w"][0], 106.0, rtol=QUOTE_RTOL)
+
+
+def test_anchored_sweep_matches_scalar_predict(params):
+    """Anchoring through sweep_arrays must agree with the scalar anchored
+    predict path at every grid point (plumbing golden, tight tolerance)."""
+    designs = list(FABRICATED.values())
+    vdd = np.asarray([0.8, 0.9])
+    vbb = np.asarray([0.0, 1.2])
+    res = sweep_arrays(designs, params, vdd, vbb, anchored=True)
+    for r in range(len(res)):
+        d = res.design_of(r)
+        ref = predict(d, params, vdd=float(res.vdd[r]),
+                      vbb=float(res.vbb[r]), anchored=True)
+        for k in ("freq_ghz", "p_total_mw", "area_mm2", "gflops_per_w",
+                  "gflops_per_mm2"):
+            np.testing.assert_allclose(res.metrics[k][r], ref[k],
+                                       rtol=1e-9, err_msg=(d.name, k))
