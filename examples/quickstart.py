@@ -14,15 +14,16 @@ from repro.core import BF16
 from repro.core.body_bias import bb_study
 from repro.core.energy_model import calibrate, predict
 from repro.core.fpu_arch import TABLE_I
+from repro.core.chip import default_policy
 from repro.core.latency_sim import calibrated_spec_mix, fig2c_penalties
-from repro.core.precision_policy import policy_for_shape
 from repro.kernels.ops import emulated_matmul
 
 
 def main():
-    print("=== 1. FPGen picks the FPU for the workload ===")
-    train_policy = policy_for_shape("train_4k")
-    decode_policy = policy_for_shape("decode_32k")
+    print("=== 1. The chip routes each workload phase to its FPU ===")
+    chip_policy = default_policy("sp")
+    train_policy = chip_policy.numerics_for_phase("train_4k")
+    decode_policy = chip_policy.numerics_for_phase("decode_32k")
     print(f"  throughput (training) -> {train_policy.fpu_design.name} "
           f"(accumulate: {train_policy.accum_style})")
     print(f"  latency (decode)      -> {decode_policy.fpu_design.name} "

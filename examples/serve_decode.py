@@ -1,5 +1,6 @@
 """Batched serving: continuous batching over a reduced assigned arch, with
-the latency-optimized FPGen unit selected for the decode workload.
+the chip routing decode to its latency unit and accounting per-request
+energy on the routed units.
 
 Run: PYTHONPATH=src python examples/serve_decode.py --arch mixtral-8x7b
 """
@@ -10,7 +11,7 @@ import jax
 import numpy as np
 
 from repro.configs.base import ARCH_IDS, get_config
-from repro.core.precision_policy import policy_for_shape
+from repro.core.chip import default_policy
 from repro.models import LM
 from repro.serve.engine import BatchedServer, Request
 
@@ -28,14 +29,18 @@ def main():
                          "use another arch for this example")
     model = LM(cfg)
     params = model.init(jax.random.key(0))
-    policy = policy_for_shape("decode_32k")
-    print(f"arch={args.arch} (reduced) | decode FPU: "
-          f"{policy.fpu_design.name} (style {policy.accum_style}) | "
+    chip_policy = default_policy(cfg.numerics_precision)
+    unit = chip_policy.unit_for_phase("decode")
+    policy = unit.numerics()
+    print(f"arch={args.arch} (reduced) | chip {chip_policy.spec.name} "
+          f"routes decode -> {unit.name} [{unit.key}] "
+          f"(style {policy.accum_style}) | "
           f"avg acc-dep stall: {policy.fpu_design.accum_latency_cycles - 1} "
           f"cycles (vs {policy.fpu_design.stages - 1} unforwarded)")
 
     rng = np.random.default_rng(0)
-    server = BatchedServer(model, params, slots=4, max_len=64)
+    server = BatchedServer(model, params, slots=4, max_len=64,
+                           chip_policy=chip_policy)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab_size, 4 + i % 5
                                         ).astype(np.int32),
@@ -53,7 +58,12 @@ def main():
     print(f"{len(reqs)} requests, {total} tokens in {dt:.2f}s "
           f"({total/dt:.1f} tok/s on CPU, {steps} engine steps)")
     for r in reqs[:3]:
-        print(f"  req {r.uid}: prompt={r.prompt.tolist()} -> {r.output}")
+        print(f"  req {r.uid}: prompt={r.prompt.tolist()} -> {r.output} "
+              f"[{r.routed_unit}, {r.energy_j*1e6:.2f} uJ]")
+    rep = server.energy_report()
+    per_unit = {k: f"{v*1e6:.1f}uJ" for k, v in rep["per_unit_j"].items()}
+    print(f"chip energy: {rep['total_j']*1e6:.1f} uJ total, "
+          f"{rep['j_per_token']*1e6:.2f} uJ/token, per unit: {per_unit}")
 
 
 if __name__ == "__main__":

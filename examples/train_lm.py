@@ -12,7 +12,7 @@ import tempfile
 import jax
 
 from repro.configs.base import ARCH_IDS, get_config
-from repro.core.precision_policy import policy_for_shape, step_energy_telemetry
+from repro.core.chip import default_policy
 from repro.data.pipeline import for_arch, make_batch
 from repro.launch.mesh import PEAK_FLOPS_BF16
 from repro.models import LM
@@ -35,9 +35,11 @@ def main():
     model = LM(cfg)
     opt = AdamWConfig(lr=3e-3, warmup_steps=20, total_steps=args.steps,
                       weight_decay=0.01)
-    policy = policy_for_shape("train_4k")
-    print(f"arch={args.arch} (reduced) | FPGen unit: "
-          f"{policy.fpu_design.name} / {policy.accum_style}")
+    chip_policy = default_policy(cfg.numerics_precision)
+    unit = chip_policy.unit_for_phase("train")
+    print(f"arch={args.arch} (reduced) | chip {chip_policy.spec.name} "
+          f"routes train -> {unit.name}: "
+          f"{unit.design.name} / {unit.numerics().accum_style}")
 
     state = make_train_state(model, jax.random.key(0), opt)
     n_params = sum(p.size for p in jax.tree.leaves(state.params))
@@ -62,8 +64,8 @@ def main():
         state, m = step_fn(state, make_batch(dcfg, i))
         stats = mon.stop()
         if (i + 1) % 20 == 0:
-            tele = step_energy_telemetry(
-                policy.fpu_design, achieved_flops=flops_step,
+            tele = chip_policy.step_energy_telemetry(
+                "train", achieved_flops=flops_step,
                 step_time_s=stats["step_time_s"],
                 peak_flops=PEAK_FLOPS_BF16)
             print(f"step {i+1:4d} loss={float(m['loss']):.4f} "
@@ -71,7 +73,7 @@ def main():
                   f"{stats['step_time_s']*1e3:.0f}ms "
                   f"| energy: {tele['joules_per_step']*1e3:.3f} mJ/step "
                   f"@ {tele['gflops_per_w']:.0f} GFLOPS/W "
-                  f"({tele['policy']})")
+                  f"({tele['policy']}, unit {tele['unit']})")
         if (i + 1) % 50 == 0:
             mgr.save(i + 1, state)
     mgr.wait()

@@ -1,0 +1,83 @@
+#!/usr/bin/env python
+"""CI bench-regression guard over the results/*.json trajectories.
+
+Each benchmark (dse_bench, autotune_bench, chip_bench) appends one record
+per run to its ``results/<name>.json`` list.  In CI the checkout carries the
+committed records and the bench step appends one fresh record, so the last
+committed record is the baseline: this script fails (exit 1) when the fresh
+warm path regresses by more than ``--max-slowdown`` (default 25%) against
+it.
+
+The guarded metric is the *machine-normalized* warm speedup each bench
+already reports (its warm time relative to the same run's cold / legacy
+reference), not raw seconds: CI runners differ in absolute speed by far
+more than 25%, but a warm-path regression (extra dispatches, a lost cache
+hit, Python overhead on the hot loop) drags the in-process ratio down on
+any machine.  The baseline is the *median* over all committed records —
+one unusually fast or slow historical sample must neither mask a real
+regression nor fail a normal run.  A fresh speedup below
+``baseline / (1 + max_slowdown)`` fails the build.
+
+Usage: python scripts/check_bench_regression.py [--results results]
+           [--max-slowdown 0.25]
+"""
+import argparse
+import json
+import os
+import statistics
+import sys
+
+#: file -> warm-over-reference speedup key guarded against degradation
+SPEEDUP_KEYS = {
+    "dse_bench.json": "speedup_warm",       # legacy loop / warm vector sweep
+    "autotune_bench.json": "speedup_warm",  # cold tune / warm same-shape tune
+    "chip_bench.json": "speedup_warm",      # cold chip tune / warm chip tune
+}
+
+
+def check_file(path: str, key: str, max_slowdown: float) -> bool:
+    """True when the fresh record is within budget (or nothing to compare)."""
+    name = os.path.basename(path)
+    if not os.path.exists(path):
+        print(f"  {name}: missing — skipped")
+        return True
+    with open(path) as f:
+        rows = json.load(f)
+    rows = [r for r in rows if key in r]
+    if len(rows) < 2:
+        print(f"  {name}: {len(rows)} record(s) with {key!r} — nothing to "
+              f"compare, skipped")
+        return True
+    baseline = statistics.median(float(r[key]) for r in rows[:-1])
+    fresh = float(rows[-1][key])
+    floor = baseline / (1.0 + max_slowdown)
+    verdict = "OK" if fresh >= floor else "REGRESSION"
+    print(f"  {name}: {key} fresh={fresh:.1f}x baseline(median of "
+          f"{len(rows) - 1})={baseline:.1f}x (floor {floor:.1f}x) "
+          f"-> {verdict}")
+    return verdict == "OK"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results")
+    ap.add_argument("--max-slowdown", type=float,
+                    default=float(os.environ.get("BENCH_MAX_SLOWDOWN", 0.25)),
+                    help="allowed warm-path slowdown vs the committed "
+                         "baseline (0.25 = +25%%)")
+    args = ap.parse_args()
+    print(f"bench-regression guard (max warm-path slowdown "
+          f"{args.max_slowdown:.0%}):")
+    ok = True
+    for fname, key in SPEEDUP_KEYS.items():
+        ok &= check_file(os.path.join(args.results, fname), key,
+                         args.max_slowdown)
+    if not ok:
+        print("FAIL: warm-path benchmark regression above threshold")
+        return 1
+    print("all bench trajectories within budget")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,7 +3,7 @@
 One ``ArchConfig`` per assigned architecture (exact published numbers) plus a
 ``reduced()`` variant for CPU smoke tests.  The ``numerics`` fields integrate
 the paper's technique: every arch carries an FPU/precision policy selected by
-FPGen DSE per workload (see repro.core.precision_policy).
+FPGen DSE per workload (routed through repro.core.chip).
 """
 from __future__ import annotations
 

@@ -9,7 +9,8 @@ objective.py        — shared objective/constraint API (argbest, Pareto axes)
 autotune.py         — workload-aware autotuner over SweepResult (Table I)
 latency_sim.py      — dependency-trace average-latency-penalty simulator (Fig. 2c)
 body_bias.py        — static/adaptive body-bias energy policies (Fig. 4)
-precision_policy.py — workload -> FPU design selection, framework integration
+chip.py             — chip-level heterogeneous-fleet API (ChipSpec/ChipPolicy/tune_chip)
+precision_policy.py — DEPRECATED shim over chip.py (kept for migration)
 trace.py            — dependency-trace extraction from jaxprs + SPEC-like mixes
 """
 from repro.core.formats import (  # noqa: F401

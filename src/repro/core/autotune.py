@@ -136,18 +136,32 @@ def profile_from_trace(name: str, profiles: List[OpProfile],
 
 
 def profile_from_config(arch: str, shape: str = "train_4k",
-                        activity: float | None = None) -> WorkloadProfile:
+                        activity: float | None = None,
+                        results_dir: str | None = "results"
+                        ) -> WorkloadProfile:
     """Profile for a model config + workload shape (``repro.configs``).
 
-    Heuristic mapping, documented in docs/autotune.md: train/prefill shapes
-    are GEMM-dominated with deep interleaving (throughput-shaped, high
-    activity); decode shapes are small-batch with short dependent chains and
-    low MXU activity (latency-leaning, leakage-dominated) — the split the
-    paper draws between its throughput and latency FPUs.
+    The activity level is resolved in priority order: an explicit
+    ``activity`` argument; the *measured* roofline utilization of the
+    (arch, shape) cell from the dry-run artifacts under ``results_dir``
+    (``repro.roofline.analysis.measured_utilization`` — the ROADMAP
+    follow-up replacing hand-set constants); and finally the documented
+    heuristic constants (train/prefill 0.8, decode 0.15).
+
+    The mix mapping is documented in docs/autotune.md: train/prefill shapes
+    are GEMM-dominated with deep interleaving (throughput-shaped); decode
+    shapes are small-batch with short dependent chains and low MXU activity
+    (latency-leaning, leakage-dominated) — the split the paper draws between
+    its throughput and latency FPUs.
     """
     from repro.configs.base import SHAPES, get_config
     get_config(arch)  # validate the arch id
     kind = SHAPES[shape].kind
+    if activity is None and results_dir is not None:
+        from repro.roofline.analysis import measured_utilization
+        meas = measured_utilization(arch, shape, results_dir)
+        if meas is not None:
+            activity = float(np.clip(meas, 0.01, 1.0))
     if kind in ("train", "prefill"):
         act = 0.8 if activity is None else activity
         return dataclasses.replace(GEMM_STREAM, name=f"{arch}:{shape}",

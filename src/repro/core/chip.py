@@ -1,0 +1,577 @@
+"""Chip-level API for heterogeneous FPU fleets — the FPMax thesis at die scale.
+
+The paper's core argument is that one die should carry *different* FPU
+microarchitectures for latency- vs throughput-bound work (Table I fabricates
+four).  This module is the single consumer-facing surface for that idea:
+
+  * a ``ChipUnit`` is one tuned unit type on the die — an ``FPUDesign`` at an
+    electrical operating point (V_DD, V_BB), replicated ``count`` times, with
+    its metric row from the sweep that selected it;
+  * a ``ChipSpec`` is an area/power-budgeted mix of units per die;
+  * a ``ChipPolicy`` is the facade the rest of the codebase asks
+    "which unit, which numerics, what energy" — per execution phase
+    (train / prefill / decode), routed through ``repro.core.objective``;
+  * ``tune_chip()`` searches unit mixes over the vectorized ``SweepResult``
+    grids (reusing the autotuner's ``SweepExecutableCache``) under die-area
+    and TDP constraints, sizes the fleet, and reports chip-level GFLOPS/W
+    with adaptive body bias per unit.
+
+The legacy entry points (``precision_policy.select_fpu`` /
+``policy_for_shape`` / ``step_energy_telemetry``) are now deprecated shims
+over this module; ``tune_chip`` with a 2-unit budget degenerates to exactly
+the Table I throughput/latency split the autotuner picks per workload.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import autotune as at
+from repro.core import objective as obj
+from repro.core.body_bias import energy_per_op
+from repro.core.dse import best_latency_design, best_throughput_design
+from repro.core.energy_model import TechParams, calibrate, predict
+from repro.core.formats import BF16, FloatFormat
+from repro.core.fpu_arch import FABRICATED, TABLE_I, FPUDesign
+
+#: canonical execution phases of a model workload (repro.configs shape kinds)
+PHASES = ("train", "prefill", "decode")
+
+#: phase substrings that classify as latency-bound (everything else is
+#: throughput-bound) — the split ``policy_for_shape`` always drew
+_LATENCY_TAGS = ("decode", "long", "latency", "chain")
+
+
+def workload_class(phase: str) -> str:
+    """'throughput' | 'latency' classification of a phase / shape-kind name."""
+    p = phase.lower()
+    return "latency" if any(t in p for t in _LATENCY_TAGS) else "throughput"
+
+
+def kernel_style_for(design: FPUDesign) -> str:
+    """fma_emu accumulation style modeling a unit's FMAC semantics."""
+    if design.style == "fma":
+        return "fused"
+    return "cascade_fwd" if design.forwarding else "cascade"
+
+
+# ---------------------------------------------------------------------------
+# Numerics policy (moved here from precision_policy; that module re-exports)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class NumericsPolicy:
+    """What the model layers actually consume for one routed unit."""
+
+    fmt: FloatFormat  # operand format for emulated matmuls
+    accum_style: str  # 'fused' | 'cascade' | 'cascade_fwd' (kernels/fma_emu)
+    fpu_design: FPUDesign  # the FPGen unit this policy models
+    compute_dtype: str = "bfloat16"  # native dtype for full-scale runs
+    emulate: bool = False  # route model matmuls through kernels/fma_emu
+
+    @property
+    def kernel_style(self) -> str:
+        return self.accum_style
+
+
+# ---------------------------------------------------------------------------
+# Chip description
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ChipUnit:
+    """One unit type on the die: a tuned design at an electrical point.
+
+    ``metrics`` is the metric row of the sweep point that selected the unit
+    (per-instance values); ``count`` replicates it.  ``phases`` are the
+    execution phases routed to this unit; ``activity`` is the busy fraction
+    the unit was tuned for (the Fig. 4 axis).
+    """
+
+    name: str
+    design: FPUDesign
+    vdd: float
+    vbb: float
+    count: int = 1
+    phases: Tuple[str, ...] = ()
+    activity: float = 1.0
+    metrics: Mapping[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def key(self) -> str:
+        return f"{self.design.name}@{self.vdd:.3f}V/bb{self.vbb:.2f}"
+
+    def metric(self, key: str) -> float:
+        """Metric column with derivations for rows from latency-free sweeps."""
+        m = self.metrics
+        if key in m:
+            return float(m[key])
+        if key == "avg_latency_penalty":
+            return 0.0
+        if key == "avg_delay_ns":
+            return float(m["cycle_ns"]) * (1.0 + self.metric(
+                "avg_latency_penalty"))
+        if key in ("e_per_flop_pj", "e_eff_pj"):
+            # mW / (2 GHz) = pJ/FLOP at 100% activity
+            return float(m["p_total_mw"]) / (2.0 * float(m["freq_ghz"]))
+        raise KeyError(f"unit {self.name!r} has no metric {key!r}")
+
+    @property
+    def e_per_flop_pj(self) -> float:
+        """Workload-effective pJ/FLOP (``e_eff_pj`` when tuned, else the
+        100%-activity energy)."""
+        return self.metric("e_eff_pj")
+
+    @property
+    def gflops_effective(self) -> float:
+        """Delivered GFLOPS per instance: stalls and idle time included."""
+        pen = self.metric("avg_latency_penalty")
+        return 2.0 * self.metric("freq_ghz") / (1.0 + pen) * self.activity
+
+    @property
+    def area_mm2(self) -> float:
+        return self.count * self.metric("area_mm2")
+
+    @property
+    def peak_power_mw(self) -> float:
+        return self.count * self.metric("p_total_mw")
+
+    @property
+    def avg_power_mw(self) -> float:
+        """Fleet average power: pJ/FLOP x delivered GFLOP/s = mW."""
+        return self.count * self.e_per_flop_pj * self.gflops_effective
+
+    def numerics(self, fmt: FloatFormat = BF16,
+                 emulate: bool = False) -> NumericsPolicy:
+        return NumericsPolicy(fmt=fmt, accum_style=kernel_style_for(
+            self.design), fpu_design=self.design, emulate=emulate)
+
+    def as_dict(self) -> Dict[str, object]:
+        return dict(unit=self.name, design=self.design.name, vdd=self.vdd,
+                    vbb=self.vbb, count=self.count, phases=list(self.phases),
+                    activity=self.activity,
+                    area_mm2=self.area_mm2,
+                    gflops_effective=self.count * self.gflops_effective,
+                    e_eff_pj=self.e_per_flop_pj,
+                    avg_power_mw=self.avg_power_mw,
+                    peak_power_mw=self.peak_power_mw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    """An area/power-budgeted mix of FPU unit types on one die."""
+
+    name: str
+    units: Tuple[ChipUnit, ...]
+    area_budget_mm2: float = math.inf
+    tdp_budget_mw: float = math.inf
+
+    def __post_init__(self):
+        names = [u.name for u in self.units]
+        if not self.units:
+            raise ValueError("a chip needs at least one unit")
+        if len(names) != len(set(names)):
+            raise ValueError(f"duplicate unit names: {names}")
+        if self.area_mm2 > self.area_budget_mm2 * (1 + 1e-12):
+            raise ValueError(
+                f"chip {self.name!r} infeasible: area {self.area_mm2:.4f}mm2 "
+                f"> budget {self.area_budget_mm2:.4f}mm2")
+        if self.peak_power_mw > self.tdp_budget_mw * (1 + 1e-12):
+            raise ValueError(
+                f"chip {self.name!r} infeasible: peak power "
+                f"{self.peak_power_mw:.1f}mW > TDP {self.tdp_budget_mw:.1f}mW")
+
+    def unit(self, name: str) -> ChipUnit:
+        for u in self.units:
+            if u.name == name:
+                return u
+        raise KeyError(f"chip {self.name!r} has no unit {name!r}; "
+                       f"have {[u.name for u in self.units]}")
+
+    @property
+    def area_mm2(self) -> float:
+        return sum(u.area_mm2 for u in self.units)
+
+    @property
+    def peak_power_mw(self) -> float:
+        return sum(u.peak_power_mw for u in self.units)
+
+    @property
+    def avg_power_mw(self) -> float:
+        return sum(u.avg_power_mw for u in self.units)
+
+    @property
+    def gflops_effective(self) -> float:
+        return sum(u.count * u.gflops_effective for u in self.units)
+
+    @property
+    def gflops_per_w(self) -> float:
+        """Chip-level efficiency at the units' tuned activities (adaptive
+        body bias per unit is already inside each unit's ``e_eff_pj``)."""
+        return self.gflops_effective / (self.avg_power_mw * 1e-3)
+
+    def as_dict(self) -> Dict[str, object]:
+        return dict(name=self.name,
+                    units=[u.as_dict() for u in self.units],
+                    area_mm2=self.area_mm2,
+                    area_budget_mm2=self.area_budget_mm2,
+                    peak_power_mw=self.peak_power_mw,
+                    tdp_budget_mw=self.tdp_budget_mw,
+                    avg_power_mw=self.avg_power_mw,
+                    gflops_effective=self.gflops_effective,
+                    gflops_per_w=self.gflops_per_w)
+
+
+# ---------------------------------------------------------------------------
+# Per-unit energy telemetry (the old step_energy_telemetry, unit-scoped)
+# ---------------------------------------------------------------------------
+def unit_energy_telemetry(design: FPUDesign, params: TechParams, *,
+                          achieved_flops: float, step_time_s: float,
+                          peak_flops: float, adaptive_bb: bool = True,
+                          vdd: Optional[float] = None,
+                          vbb_active: float = 1.2,
+                          vbb_idle: float = 0.45) -> Dict[str, float]:
+    """Per-step energy report for one unit at one operating point.
+
+    utilization = achieved/peak FLOP rate (from the roofline pass); the
+    body-bias policy turns that into J/step and GFLOPS/W exactly as the
+    paper's Fig. 4 analysis does for partially-utilized FPUs.
+    """
+    vdd = design.vdd if vdd is None else vdd
+    util = max(min(achieved_flops / step_time_s / peak_flops, 1.0), 1e-4)
+    e = energy_per_op(design, params, vdd=vdd, vbb_active=vbb_active,
+                      vbb_idle=(min(vbb_idle, vbb_active) if adaptive_bb
+                                else None), util=util)
+    joules = e["e_total_pj"] * 1e-12 * achieved_flops
+    return dict(utilization=util, pj_per_flop=e["e_total_pj"],
+                joules_per_step=joules,
+                gflops_per_w=1.0 / (e["e_total_pj"] * 1e-3),
+                policy="adaptive_bb" if adaptive_bb else "static_bb")
+
+
+# ---------------------------------------------------------------------------
+# The facade
+# ---------------------------------------------------------------------------
+#: objective used to break routing ties per workload class (PR 2 API)
+_CLASS_OBJECTIVES = {"throughput": obj.THROUGHPUT, "latency": obj.LATENCY}
+
+
+class ChipPolicy:
+    """The one way the codebase asks "which unit, which numerics, what
+    energy" for an execution phase of a workload.
+
+    Routing: exact phase-tag match first; otherwise units of the phase's
+    workload class compete under the class objective
+    (``objective.THROUGHPUT`` / ``objective.LATENCY``) over their metric
+    rows — selection stays in the shared objective API, never ad-hoc
+    arithmetic.
+    """
+
+    def __init__(self, spec: ChipSpec, params: Optional[TechParams] = None):
+        self.spec = spec
+        self._params = params
+        self._route: Dict[Tuple[str, Optional[str]], ChipUnit] = {}
+
+    @property
+    def params(self) -> TechParams:
+        if self._params is None:
+            self._params = calibrate()
+        return self._params
+
+    # -- routing -----------------------------------------------------------
+    def _unit_class(self, u: ChipUnit) -> str:
+        tags = (u.name,) + u.phases
+        return "latency" if any(workload_class(t) == "latency"
+                                for t in tags) else "throughput"
+
+    def unit_for_phase(self, phase: str,
+                       precision: Optional[str] = None) -> ChipUnit:
+        """Route an execution phase (or shape kind / shape name) to a unit."""
+        key = (phase, precision)
+        hit = self._route.get(key)
+        if hit is not None:
+            return hit
+        pool = [u for u in self.spec.units
+                if precision is None or u.design.precision == precision]
+        pool = pool or list(self.spec.units)
+        exact = [u for u in pool if u.name == phase or phase in u.phases]
+        cls = workload_class(phase)
+        cand = exact or [u for u in pool if self._unit_class(u) == cls] or pool
+        if len(cand) == 1:
+            unit = cand[0]
+        else:
+            objective = _CLASS_OBJECTIVES[cls]
+            cols = {k for k, _ in objective.terms}
+            metrics = {k: np.asarray([u.metric(k) for u in cand])
+                       for k in cols}
+            unit = cand[obj.argbest(metrics, objective)]
+        self._route[key] = unit
+        return unit
+
+    def select_fpu(self, workload: str, precision: Optional[str] = None
+                   ) -> FPUDesign:
+        """Design for a workload class ('throughput' | 'latency')."""
+        if workload not in ("throughput", "latency"):
+            raise ValueError(
+                f"workload must be throughput|latency, got {workload!r}")
+        return self.unit_for_phase(workload, precision=precision).design
+
+    # -- numerics ----------------------------------------------------------
+    def numerics_for_phase(self, phase: str, fmt: FloatFormat = BF16,
+                           precision: Optional[str] = None,
+                           emulate: bool = False) -> NumericsPolicy:
+        return self.unit_for_phase(phase, precision=precision).numerics(
+            fmt=fmt, emulate=emulate)
+
+    # -- energy ------------------------------------------------------------
+    def energy_per_flop_pj(self, phase: str,
+                           precision: Optional[str] = None) -> float:
+        return self.unit_for_phase(phase, precision=precision).e_per_flop_pj
+
+    def request_energy_j(self, phase: str, flops: float,
+                         precision: Optional[str] = None) -> float:
+        """Energy attributed to ``flops`` executed on the routed unit."""
+        return flops * self.energy_per_flop_pj(phase, precision) * 1e-12
+
+    def step_energy_telemetry(self, phase: str, *, achieved_flops: float,
+                              step_time_s: float, peak_flops: float,
+                              adaptive_bb: bool = True,
+                              precision: Optional[str] = None
+                              ) -> Dict[str, object]:
+        """Per-step telemetry on the routed unit, tagged with the unit."""
+        u = self.unit_for_phase(phase, precision=precision)
+        tele = unit_energy_telemetry(
+            u.design, self.params, achieved_flops=achieved_flops,
+            step_time_s=step_time_s, peak_flops=peak_flops,
+            adaptive_bb=adaptive_bb, vdd=u.vdd, vbb_active=u.vbb)
+        tele["unit"] = u.name
+        tele["design"] = u.design.name
+        tele["chip"] = self.spec.name
+        return tele
+
+    @staticmethod
+    def aggregate_telemetry(reports: Sequence[Mapping[str, object]]
+                            ) -> Dict[str, object]:
+        """Chip-level rollup of per-step / per-request telemetry dicts."""
+        per_unit: Dict[str, float] = {}
+        total = 0.0
+        for r in reports:
+            j = float(r.get("joules_per_step", r.get("energy_j", 0.0)))
+            unit = str(r.get("unit", "?"))
+            per_unit[unit] = per_unit.get(unit, 0.0) + j
+            total += j
+        return dict(total_j=total, per_unit_j=per_unit, n_reports=len(reports))
+
+
+# ---------------------------------------------------------------------------
+# Stock chips + the (recalibration-safe) default policy cache
+# ---------------------------------------------------------------------------
+def default_chip(precision: str = "sp",
+                 params: Optional[TechParams] = None) -> ChipSpec:
+    """The compatibility 2-unit die: the DSE throughput and latency optima
+    for one precision — exactly the designs the legacy ``select_fpu``
+    entry point handed out per workload class."""
+    params = params or calibrate()
+    tp = best_throughput_design(precision, params)
+    lat = best_latency_design(precision, params)
+    units = (
+        ChipUnit(f"{precision}_throughput", tp.design, tp.vdd, tp.vbb,
+                 phases=("train", "prefill"), metrics=dict(tp.metrics)),
+        ChipUnit(f"{precision}_latency", lat.design, lat.vdd, lat.vbb,
+                 phases=("decode", "long"), metrics=dict(lat.metrics)),
+    )
+    return ChipSpec(f"default_{precision}", units)
+
+
+def fabricated_chip(precision: Optional[str] = None,
+                    params: Optional[TechParams] = None) -> ChipSpec:
+    """A die of the fabricated FPMax units at their Table I operating
+    points (silicon-anchored metrics) — FMA units serve throughput phases,
+    CMA units latency phases."""
+    params = params or calibrate()
+    units = []
+    for name, d in FABRICATED.items():
+        if precision is not None and d.precision != precision:
+            continue
+        m = TABLE_I[name]
+        row = predict(d, params, vdd=m.vdd, vbb=m.vbb, anchored=True)
+        phases = ("train", "prefill") if d.style == "fma" \
+            else ("decode", "long")
+        units.append(ChipUnit(name, d, m.vdd, m.vbb, phases=phases,
+                              metrics=row))
+    return ChipSpec(f"fpmax_{precision or 'sp_dp'}", tuple(units))
+
+
+#: ChipPolicy instances keyed by (precision, resolved TechParams).  The
+#: params are resolved *before* keying — unlike the old ``select_fpu``
+#: ``lru_cache`` on an ``Optional[TechParams]`` default, a recalibration
+#: (new TechParams values) can never be shadowed by a stale None entry.
+_DEFAULT_POLICIES: Dict[Tuple[str, TechParams], ChipPolicy] = {}
+
+
+def default_policy(precision: str = "sp",
+                   params: Optional[TechParams] = None) -> ChipPolicy:
+    params = params or calibrate()
+    key = (precision, params)
+    pol = _DEFAULT_POLICIES.get(key)
+    if pol is None:
+        pol = ChipPolicy(default_chip(precision, params), params)
+        _DEFAULT_POLICIES[key] = pol
+    return pol
+
+
+def clear_policy_cache() -> None:
+    _DEFAULT_POLICIES.clear()
+
+
+# ---------------------------------------------------------------------------
+# Chip tuning
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PhaseSpec:
+    """One execution phase of the chip workload to provision a unit for."""
+
+    name: str
+    profile: at.WorkloadProfile
+    precision: str = "sp"
+    flops_fraction: float = 1.0  # share of chip FLOPs issued in this phase
+    designs: Optional[Tuple[FPUDesign, ...]] = None  # default: full enum
+    anchored: bool = False
+    constraints: Tuple[obj.Constraint, ...] = ()
+
+
+def phases_from_config(arch: str,
+                       shapes: Sequence[str] = ("train_4k", "decode_32k"),
+                       results_dir: Optional[str] = "results",
+                       activity: Optional[Dict[str, float]] = None
+                       ) -> List[PhaseSpec]:
+    """Config-derived chip workload: one phase per workload shape, FLOP
+    shares from the roofline model-FLOP estimate, activities from measured
+    dry-run utilizations where available (``results_dir``)."""
+    from repro.configs.base import SHAPES, get_config
+    from repro.roofline.analysis import model_flops_estimate
+    cfg = get_config(arch)
+    weights = {s: model_flops_estimate(cfg, SHAPES[s]) for s in shapes}
+    total = sum(weights.values())
+    out = []
+    for s in shapes:
+        act = (activity or {}).get(s)
+        profile = at.profile_from_config(arch, s, activity=act,
+                                         results_dir=results_dir)
+        out.append(PhaseSpec(s, profile, precision=cfg.numerics_precision,
+                             flops_fraction=weights[s] / total))
+    return out
+
+
+@dataclasses.dataclass
+class ChipTuneResult:
+    spec: ChipSpec
+    policy: ChipPolicy
+    phases: List[PhaseSpec]
+    tunes: List[at.TuneResult]
+    report: Dict[str, object]
+
+    def as_dict(self) -> Dict[str, object]:
+        return dict(chip=self.spec.as_dict(), report=self.report)
+
+
+def _fleet_counts(phases: Sequence[PhaseSpec], tunes: Sequence[at.TuneResult],
+                  area_budget_mm2: float, tdp_budget_mw: float) -> List[int]:
+    """Service-balanced fleet sizing: instances per unit proportional to the
+    phase's FLOP share over the unit's delivered GFLOPS, scaled to the
+    tightest budget.  Unbudgeted chips get one instance per unit."""
+    demand = []
+    for ph, t in zip(phases, tunes):
+        pen = t.metrics.get("avg_latency_penalty", 0.0)
+        g_eff = 2.0 * t.metrics["freq_ghz"] / (1.0 + pen) \
+            * ph.profile.activity
+        demand.append(ph.flops_fraction / g_eff)
+    scales = []
+    if math.isfinite(area_budget_mm2):
+        scales.append(area_budget_mm2 / sum(
+            d * t.metrics["area_mm2"] for d, t in zip(demand, tunes)))
+    if math.isfinite(tdp_budget_mw):
+        scales.append(tdp_budget_mw / sum(
+            d * t.metrics["p_total_mw"] for d, t in zip(demand, tunes)))
+    if not scales:
+        return [1] * len(phases)
+    s = min(scales)
+    counts = [max(1, int(s * d)) for d in demand]
+    # forcing >=1 instance of every unit can overshoot a tight budget;
+    # shed instances from the largest shrinkable contributor until it fits
+    # (all-singleton overshoot is a genuine infeasibility — ChipSpec raises)
+    areas = [t.metrics["area_mm2"] for t in tunes]
+    powers = [t.metrics["p_total_mw"] for t in tunes]
+    while True:
+        over_area = math.isfinite(area_budget_mm2) and sum(
+            c * a for c, a in zip(counts, areas)) > area_budget_mm2
+        over_tdp = math.isfinite(tdp_budget_mw) and sum(
+            c * p for c, p in zip(counts, powers)) > tdp_budget_mw
+        if not (over_area or over_tdp):
+            return counts
+        cost = areas if over_area else powers
+        shrinkable = [i for i in range(len(counts)) if counts[i] > 1]
+        if not shrinkable:
+            return counts
+        counts[max(shrinkable, key=lambda i: counts[i] * cost[i])] -= 1
+
+
+def tune_chip(phases: Sequence[PhaseSpec], *,
+              area_budget_mm2: float = math.inf,
+              tdp_budget_mw: float = math.inf,
+              params: Optional[TechParams] = None,
+              vdd_grid: np.ndarray = at.TUNE_VDD_GRID,
+              vbb_grid: np.ndarray = at.TUNE_VBB_GRID,
+              cache=at.DEFAULT_CACHE,
+              name: str = "chip") -> ChipTuneResult:
+    """Tune a heterogeneous unit mix for a multi-phase workload.
+
+    Per phase, the workload autotuner searches the full vectorized
+    (design x V_DD x V_BB) grid through the shared ``SweepExecutableCache``
+    (one XLA compile per grid shape per process), with per-unit budget
+    feasibility folded in as ``objective.Constraint`` rows.  The fleet is
+    then sized service-balanced under the die-area and TDP budgets.  With
+    two phases and open budgets this degenerates to exactly the Table I
+    throughput/latency split ``autotune`` picks per workload.
+    """
+    phases = list(phases)
+    if not phases:
+        raise ValueError("tune_chip needs at least one phase")
+    params = params or calibrate()
+    budget_cons: Tuple[obj.Constraint, ...] = ()
+    if math.isfinite(area_budget_mm2):
+        budget_cons += (obj.Constraint("area_mm2", hi=area_budget_mm2),)
+    if math.isfinite(tdp_budget_mw):
+        budget_cons += (obj.Constraint("p_total_mw", hi=tdp_budget_mw),)
+    tunes = [
+        at.autotune(ph.profile, precision=ph.precision,
+                    designs=ph.designs, params=params,
+                    vdd_grid=vdd_grid, vbb_grid=vbb_grid,
+                    anchored=ph.anchored,
+                    constraints=ph.constraints + budget_cons, cache=cache)
+        for ph in phases
+    ]
+    counts = _fleet_counts(phases, tunes, area_budget_mm2, tdp_budget_mw)
+    units = tuple(
+        ChipUnit(ph.name, t.design, t.vdd, t.vbb, count=c,
+                 phases=(ph.name, ph.profile.name),
+                 activity=ph.profile.activity, metrics=dict(t.metrics))
+        for ph, t, c in zip(phases, tunes, counts))
+    spec = ChipSpec(name, units, area_budget_mm2=area_budget_mm2,
+                    tdp_budget_mw=tdp_budget_mw)
+    policy = ChipPolicy(spec, params)
+    per_unit = []
+    for ph, t, u in zip(phases, tunes, units):
+        static_pj = at.static_bb_energy(t)
+        row = u.as_dict()
+        row.update(flops_share=ph.flops_fraction,
+                   static_bb_e_pj=static_pj,
+                   adaptive_bb_saving=static_pj / t.metrics["e_eff_pj"],
+                   n_points=t.n_points, objective=t.objective_name)
+        per_unit.append(row)
+    report = dict(
+        chip=spec.as_dict(), units=per_unit,
+        distinct_designs=len({u.design.name for u in units}),
+        cache_stats=dict(cache.stats) if cache is not None else {})
+    return ChipTuneResult(spec, policy, phases, tunes, report)

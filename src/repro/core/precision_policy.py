@@ -1,78 +1,76 @@
-"""Workload -> FPU design selection: the paper's technique as a framework
-feature.
+"""DEPRECATED compatibility shim over ``repro.core.chip``.
 
-FPMax's thesis is that latency-bound and throughput-bound workloads want
-different FPU microarchitectures.  In this framework every (architecture x
-input shape) cell is classified by its execution profile (training/prefill =
-throughput-bound; autoregressive decode = latency-bound serial chains), FPGen
-DSE picks the matching unit, and the numerics policy (format + accumulation
-style for the fma_emu kernel / matmul layers) plus the body-bias energy
-telemetry follow from that design.
+Everything this module used to do — workload -> FPU design selection, the
+numerics policy for the model layers, per-step energy telemetry — now lives
+behind the chip-level facade (``ChipSpec`` / ``ChipPolicy`` / ``tune_chip``),
+which routes *per execution phase* on a heterogeneous die instead of handing
+out one unit at a time.  See docs/chip.md for the migration guide.
+
+The old entry points are preserved with identical return values (the shim's
+``select_fpu`` resolves through the default 2-unit chip, whose units are the
+same ``dse.best_throughput_design`` / ``dse.best_latency_design`` picks) but
+emit ``DeprecationWarning``.  The old ``functools.lru_cache`` on
+``select_fpu`` keyed an ``Optional[TechParams]`` default, silently pinning
+whatever calibration ran first; ``chip.default_policy`` resolves the params
+*before* caching, so recalibration is always respected.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
+import warnings
 from typing import Optional
 
-from repro.core import dse
-from repro.core.body_bias import energy_per_op
+from repro.core.chip import (NumericsPolicy, default_policy,  # noqa: F401
+                             kernel_style_for, unit_energy_telemetry)
 from repro.core.energy_model import TechParams, calibrate
 from repro.core.formats import BF16, FP32, FloatFormat
 from repro.core.fpu_arch import FABRICATED, FPUDesign
 
+__all__ = ["NumericsPolicy", "select_fpu", "policy_for_shape",
+           "fabricated_policy", "step_energy_telemetry"]
 
-@dataclasses.dataclass(frozen=True)
-class NumericsPolicy:
-    """What the model layers actually consume."""
 
-    fmt: FloatFormat  # operand format for emulated matmuls
-    accum_style: str  # 'fused' | 'cascade' | 'cascade_fwd' (kernels/fma_emu)
-    fpu_design: FPUDesign  # the FPGen unit this policy models
-    compute_dtype: str = "bfloat16"  # native dtype for full-scale runs
-
-    @property
-    def kernel_style(self) -> str:
-        return self.accum_style
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.core.precision_policy.{old} is deprecated; use "
+        f"repro.core.chip.{new} (see docs/chip.md)",
+        DeprecationWarning, stacklevel=3)
 
 
 def _style_to_kernel(d: FPUDesign) -> str:
-    if d.style == "fma":
-        return "fused"
-    return "cascade_fwd" if d.forwarding else "cascade"
+    # kept for old imports; canonical name is chip.kernel_style_for
+    return kernel_style_for(d)
 
 
-@functools.lru_cache(maxsize=16)
 def select_fpu(workload: str, precision: str = "sp",
                params: Optional[TechParams] = None) -> FPUDesign:
-    """DSE-pick the FPU for a workload class ('throughput' | 'latency')."""
-    params = params or calibrate()
-    if workload == "throughput":
-        return dse.best_throughput_design(precision, params).design
-    if workload == "latency":
-        return dse.best_latency_design(precision, params).design
-    raise ValueError(f"workload must be throughput|latency, got {workload!r}")
+    """DSE-pick the FPU for a workload class ('throughput' | 'latency').
+
+    Deprecated: ask the chip — ``chip.default_policy(precision)
+    .unit_for_phase(phase).design``.
+    """
+    _deprecated("select_fpu", "ChipPolicy.unit_for_phase")
+    return default_policy(precision, params).select_fpu(workload)
 
 
 def policy_for_shape(shape_kind: str, precision: str = "sp",
                      fmt: FloatFormat = BF16) -> NumericsPolicy:
     """Map an input-shape kind to its numerics policy.
 
-    train/prefill: massively parallel FMAC streams -> throughput unit (FMA).
-    decode: per-token serial dependence (one row through the whole model per
-    step) -> latency unit (CMA with forwarding).
+    Deprecated: ``chip.default_policy(precision)
+    .numerics_for_phase(shape_kind, fmt=fmt)``.
     """
-    workload = "latency" if "decode" in shape_kind or "long" in shape_kind \
-        else "throughput"
-    design = select_fpu(workload, precision)
-    return NumericsPolicy(fmt=fmt, accum_style=_style_to_kernel(design),
-                          fpu_design=design)
+    _deprecated("policy_for_shape", "ChipPolicy.numerics_for_phase")
+    return default_policy(precision).numerics_for_phase(shape_kind, fmt=fmt)
 
 
 def fabricated_policy(name: str, fmt: FloatFormat = FP32) -> NumericsPolicy:
-    """Policy modeling one of the four FPMax silicon units by name."""
+    """Policy modeling one of the four FPMax silicon units by name.
+
+    Deprecated: ``chip.fabricated_chip().unit(name).numerics(fmt=fmt)``.
+    """
+    _deprecated("fabricated_policy", "fabricated_chip().unit(name).numerics")
     d = FABRICATED[name]
-    return NumericsPolicy(fmt=fmt, accum_style=_style_to_kernel(d),
+    return NumericsPolicy(fmt=fmt, accum_style=kernel_style_for(d),
                           fpu_design=d)
 
 
@@ -82,16 +80,13 @@ def step_energy_telemetry(design: FPUDesign, *, achieved_flops: float,
                           params: Optional[TechParams] = None) -> dict:
     """Per-step energy report for the training loop.
 
-    utilization = achieved/peak FLOP rate (from the roofline pass); the
-    body-bias policy turns that into J/step and GFLOPS/W exactly as the
-    paper's Fig. 4 analysis does for partially-utilized FPUs.
+    Deprecated: ``chip.ChipPolicy.step_energy_telemetry(phase, ...)`` routes
+    the phase to its unit and tags the report; this shim keeps the old
+    design-scoped call (nominal V_DD, full forward bias) bit-identical.
     """
-    params = params or calibrate()
-    util = max(min(achieved_flops / step_time_s / peak_flops, 1.0), 1e-4)
-    e = energy_per_op(design, params, vdd=design.vdd, vbb_active=1.2,
-                      vbb_idle=(0.45 if adaptive_bb else None), util=util)
-    joules = e["e_total_pj"] * 1e-12 * achieved_flops
-    return dict(utilization=util, pj_per_flop=e["e_total_pj"],
-                joules_per_step=joules,
-                gflops_per_w=1.0 / (e["e_total_pj"] * 1e-3),
-                policy="adaptive_bb" if adaptive_bb else "static_bb")
+    _deprecated("step_energy_telemetry", "ChipPolicy.step_energy_telemetry")
+    return unit_energy_telemetry(design, params or calibrate(),
+                                 achieved_flops=achieved_flops,
+                                 step_time_s=step_time_s,
+                                 peak_flops=peak_flops,
+                                 adaptive_bb=adaptive_bb)

@@ -7,4 +7,5 @@ ssm_scan.py        — fused selective-scan (the Mamba recurrence in VMEM;
 ops.py             — jit'd public wrappers w/ backend dispatch
 ref.py             — pure-jnp oracles (bitwise-matching k-block semantics)
 """
-from repro.kernels.ops import emulated_matmul, quantize_tensor  # noqa: F401
+from repro.kernels.ops import (emulated_matmul, matmul_for_policy,  # noqa: F401
+                               quantize_tensor)

@@ -61,6 +61,19 @@ def emulated_matmul(
     return out.reshape(batch_shape + out.shape[-2:]) if batch_shape else out[0]
 
 
+def matmul_for_policy(a: jax.Array, b: jax.Array, policy,
+                      **kw) -> jax.Array:
+    """``emulated_matmul`` under a chip ``NumericsPolicy``.
+
+    The format and accumulation style come from the policy of whichever
+    chip unit was routed for the execution phase
+    (``ChipPolicy.numerics_for_phase``), so kernel callers never hand-pick
+    a (fmt, style) pair that could drift from the die's actual units.
+    """
+    return emulated_matmul(a, b, fmt=policy.fmt, style=policy.kernel_style,
+                           **kw)
+
+
 def quantize_tensor(
     x: jax.Array, *, fmt: FloatFormat | str, impl: str = "auto"
 ) -> jax.Array:

@@ -49,6 +49,13 @@ MICROBATCHES = {
 }
 
 
+def _chip_policy(precision: str):
+    """The default chip for a precision (chip.default_policy memoizes per
+    resolved calibration; only the first call per process runs the DSE)."""
+    from repro.core.chip import default_policy
+    return default_policy(precision)
+
+
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              microbatches: int | None = None, triangle_skip: bool = False,
              verbose: bool = True):
@@ -58,10 +65,12 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     ctx = sh.make_context(mesh)
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
     chips = mesh.size
+    chip_policy = _chip_policy(get_config(arch).numerics_precision)
     t0 = time.time()
     with sh.use_mesh(ctx):
         cell = make_cell(arch, shape_name, ctx, microbatches=microbatches,
-                         triangle_skip=triangle_skip)
+                         triangle_skip=triangle_skip,
+                         chip_policy=chip_policy)
         # donate the training state / decode cache (optimizer and KV-cache
         # updates alias in place, exactly as the real training loop runs)
         donate = (0,) if cell.kind == "train" else \
@@ -85,9 +94,19 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
     report = analyze(arch, shape_name, mesh_name, chips, compiled,
                      get_config(arch), SHAPES[shape_name])
+    # the roofline-measured utilization of THIS cell feeds the chip's
+    # body-bias energy telemetry (Fig. 4 accounting on the routed unit)
+    energy = chip_policy.step_energy_telemetry(
+        SHAPES[shape_name].kind,
+        achieved_flops=report.model_flops,
+        step_time_s=report.step_time_bound_s,
+        peak_flops=report.chips * report.peak_flops,
+        precision=get_config(arch).numerics_precision)
     row = report.as_dict()
     row.update({
         "kind": cell.kind,
+        "fpu_unit": cell.unit,
+        "chip_energy": energy,
         "memory": mem_info,
         "bytes_per_device_hbm": (mem_info.get("argument_size_in_bytes", 0)
                                  + mem_info.get("temp_size_in_bytes", 0)),
@@ -99,7 +118,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         print(f"[{mesh_name}] {arch} x {shape_name}: OK "
               f"(lower {t_lower:.0f}s compile {t_compile:.0f}s, "
               f"bottleneck={row['bottleneck']}, "
-              f"roofline_frac={row['roofline_fraction']:.3f})", flush=True)
+              f"roofline_frac={row['roofline_fraction']:.3f}, "
+              f"unit={cell.unit})", flush=True)
         print(f"  memory_analysis: {mem_info}", flush=True)
         print(f"  cost: flops/dev={row['flops_per_device']:.3e} "
               f"bytes/dev={row['bytes_per_device']:.3e} "

@@ -29,6 +29,15 @@ class CellSpec(NamedTuple):
     arg_shapes: Tuple  # ShapeDtypeStruct pytrees
     in_shardings: Tuple
     kind: str
+    unit: str = ""  # chip FPU unit routed for this cell's execution phase
+
+
+def _routed_unit(chip_policy, cfg: ArchConfig, shape: ShapeSpec) -> str:
+    """Name of the chip unit the cell's phase routes to ('' without a chip)."""
+    if chip_policy is None:
+        return ""
+    return chip_policy.unit_for_phase(
+        shape.kind, precision=cfg.numerics_precision).name
 
 
 def _sds(shape, dtype):
@@ -94,9 +103,11 @@ def _cache_specs(model: LM, cache_shapes, batch: int, ctx):
 def make_cell(arch: str, shape_name: str, ctx: sh.MeshContext, *,
               opt_cfg: Optional[AdamWConfig] = None,
               microbatches: int = 1,
-              triangle_skip: bool = False) -> CellSpec:
+              triangle_skip: bool = False,
+              chip_policy=None) -> CellSpec:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
+    unit = _routed_unit(chip_policy, cfg, shape)
     model = LM(cfg)
     opt_cfg = opt_cfg or AdamWConfig()
 
@@ -115,7 +126,7 @@ def make_cell(arch: str, shape_name: str, ctx: sh.MeshContext, *,
         step = make_train_step(model, opt_cfg, microbatches=microbatches,
                                grad_shardings=state_sh.params)
         return CellSpec(step, (state_shapes, batch_shapes),
-                        (state_sh, batch_sh), "train")
+                        (state_sh, batch_sh), "train", unit)
 
     if shape.kind == "prefill":
         batch_shapes = _batch_shapes(cfg, shape)
@@ -129,7 +140,7 @@ def make_cell(arch: str, shape_name: str, ctx: sh.MeshContext, *,
                 max_len=shape.seq_len)
 
         return CellSpec(prefill_fn, (param_shapes, batch_shapes),
-                        (param_sh, batch_sh), "prefill")
+                        (param_sh, batch_sh), "prefill", unit)
 
     # decode: one new token against a cache of seq_len
     b = shape.global_batch
@@ -144,4 +155,4 @@ def make_cell(arch: str, shape_name: str, ctx: sh.MeshContext, *,
         return model.decode_step(params, cache, tokens)
 
     return CellSpec(serve_step, (param_shapes, cache_shapes, tok_shape),
-                    (param_sh, cache_sh, tok_sh), "decode")
+                    (param_sh, cache_sh, tok_sh), "decode", unit)

@@ -4,10 +4,14 @@ Full-scale dry-run cells run native bf16/f32 einsums (the TPU MXU path whose
 roofline we analyze).  Smoke-scale and numerics-study runs route through the
 fma_emu Pallas kernel semantics, so any generated FPU format/accumulation
 style can be evaluated end-to-end on a real model.
+
+The ``NumericsPolicy`` consumed here comes from the chip facade
+(``repro.core.chip``): ``ChipPolicy.numerics_for_phase(phase, emulate=True)``
+returns the policy of the unit routed for the execution phase, and
+``chip_matmul`` is the one-call path from a chip + phase to an emulated
+matmul under that unit's exact FMAC semantics.
 """
 from __future__ import annotations
-
-from typing import Optional
 
 import jax.numpy as jnp
 
@@ -27,8 +31,24 @@ def matmul(x, w, policy=None):
     return out.reshape(lead + (w.shape[-1],)).astype(x.dtype)
 
 
+def chip_matmul(x, w, chip_policy, phase: str, fmt="bf16",
+                precision: str | None = None):
+    """Matmul under the numerics of the chip unit routed for ``phase``.
+
+    ``chip_policy`` is a ``repro.core.chip.ChipPolicy``; the routed unit's
+    format/accumulation-style policy is applied through the fma_emu kernel
+    semantics (``emulate=True``).
+    """
+    fmt = get_format(fmt) if isinstance(fmt, str) else fmt
+    pol = chip_policy.numerics_for_phase(phase, fmt=fmt,
+                                         precision=precision, emulate=True)
+    return matmul(x, w, pol)
+
+
 class EmulatedPolicy:
-    """Light adapter marking a NumericsPolicy as active for model matmuls."""
+    """Light adapter marking an ad-hoc (fmt, style) pair as active for model
+    matmuls.  Prefer ``chip.NumericsPolicy(..., emulate=True)`` — this class
+    predates the chip facade and is kept for direct kernel studies."""
 
     emulate = True
 

@@ -149,6 +149,72 @@ class RooflineReport:
         }
 
 
+# ---------------------------------------------------------------------------
+# Measured utilizations (feeds repro.core.autotune.profile_from_config)
+# ---------------------------------------------------------------------------
+#: parsed utilization tables memoized per results_dir, invalidated when the
+#: artifact files' (path, mtime, size) signature changes
+_UTILIZATION_CACHE: Dict[str, tuple] = {}
+
+
+def measured_utilizations(results_dir: str = "results"
+                          ) -> Dict[tuple, float]:
+    """(arch, shape) -> measured roofline fraction from dry-run artifacts.
+
+    Scans ``results_dir/dryrun_*.json`` (written by ``repro.launch.dryrun``)
+    and returns, per (arch, shape) cell, the best ``roofline_fraction``
+    achieved across meshes — the fraction of the compute roofline the cell
+    actually sustains, i.e. the FPU activity the chip autotuner should tune
+    for instead of hand-set constants.  Missing/failed cells are skipped;
+    an absent directory yields an empty table.  Parsed tables are memoized
+    per directory and refreshed when the artifacts change on disk.
+    """
+    import glob
+    import json
+    import os
+
+    paths = sorted(glob.glob(os.path.join(results_dir, "dryrun_*.json")))
+
+    def _stat(p):
+        try:
+            st = os.stat(p)
+            return (p, st.st_mtime_ns, st.st_size)
+        except OSError:
+            return (p, None, None)
+
+    sig = tuple(_stat(p) for p in paths)
+    cached = _UTILIZATION_CACHE.get(results_dir)
+    if cached is not None and cached[0] == sig:
+        return dict(cached[1])
+
+    out: Dict[tuple, float] = {}
+    for path in paths:
+        try:
+            with open(path) as f:
+                rows = json.load(f)
+        except (OSError, ValueError):
+            continue
+        for key, row in rows.items():
+            if not isinstance(row, dict) or row.get("status") != "ok":
+                continue
+            if "|" not in key:
+                continue
+            arch, shape = key.split("|", 1)
+            frac = row.get("roofline_fraction")
+            if frac is None:
+                continue
+            cell = (arch, shape)
+            out[cell] = max(out.get(cell, 0.0), float(frac))
+    _UTILIZATION_CACHE[results_dir] = (sig, out)
+    return dict(out)
+
+
+def measured_utilization(arch: str, shape: str,
+                         results_dir: str = "results") -> Optional[float]:
+    """Best measured roofline fraction for one cell, or None if unmeasured."""
+    return measured_utilizations(results_dir).get((arch, shape))
+
+
 def model_flops_estimate(cfg, shape) -> float:
     """6*N*D for training; 2*N*D for inference (per step/token set)."""
     n = cfg.active_param_count()

@@ -6,6 +6,14 @@ The engine drives the LM's prefill/decode steps with a fixed slot count
 finished/expired slots are recycled without recompiling — the production
 pattern for TPU serving (one compiled decode XLA program, rotating traffic).
 
+When a ``repro.core.chip.ChipPolicy`` is attached, every request is tagged
+with the unit the chip routes its decode phase to, and the engine accounts
+per-request energy on the routed units: the prompt forward pass — including
+the logits that produce the first output token — on the prefill unit, and
+each decode-step token on the decode unit.  Expired requests release their
+slot and keep the partial energy accrued so far; ``energy_report()``
+aggregates chip-level.
+
 Greedy sampling only (deterministic; tests compare against per-sample
 decoding).  Temperature/top-k hooks are provided for the examples.
 """
@@ -32,19 +40,36 @@ class Request:
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     expired: bool = False
+    routed_unit: str = ""  # chip unit serving this request's decode phase
+    energy_j: float = 0.0  # total (partial if expired)
+    unit_energy_j: Dict[str, float] = dataclasses.field(default_factory=dict)
 
 
 class BatchedServer:
-    """Fixed-slot continuous batching server around one LM."""
+    """Fixed-slot continuous batching server around one LM.
+
+    ``chip_policy`` (a ``repro.core.chip.ChipPolicy``) enables per-unit
+    energy telemetry; ``flops_per_token`` defaults to ``2 * active params``
+    of the model config (the roofline inference estimate).
+    """
 
     def __init__(self, model: LM, params, *, slots: int, max_len: int,
-                 pad_id: int = 0):
+                 pad_id: int = 0, chip_policy=None,
+                 flops_per_token: Optional[float] = None):
         self.model = model
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.pad_id = pad_id
         self.cfg = model.cfg
+        self.chip_policy = chip_policy
+        self._precision = getattr(self.cfg, "numerics_precision", None)
+        if flops_per_token is None and hasattr(self.cfg,
+                                               "active_param_count"):
+            flops_per_token = 2.0 * self.cfg.active_param_count()
+        self.flops_per_token = flops_per_token or 0.0
+        self.tokens_decoded = 0
+        self._unit_energy_j: Dict[str, float] = {}
         self._queue: List[Request] = []
         self._active: List[Optional[Request]] = [None] * slots
         # per-slot caches are merged into one batched cache
@@ -53,6 +78,32 @@ class BatchedServer:
         self._next_tok = np.full((slots, 1), pad_id, np.int32)
         self._decode = jax.jit(
             lambda p, c, t: model.decode_step(p, c, t))
+
+    # ------------------------------------------------------- chip telemetry
+    def _charge(self, req: Request, phase: str, flops: float) -> None:
+        """Account ``flops`` on the unit the chip routes ``phase`` to."""
+        if self.chip_policy is None or not flops:
+            return
+        unit = self.chip_policy.unit_for_phase(phase,
+                                               precision=self._precision)
+        e_j = self.chip_policy.request_energy_j(phase, flops,
+                                                precision=self._precision)
+        req.energy_j += e_j
+        req.unit_energy_j[unit.name] = \
+            req.unit_energy_j.get(unit.name, 0.0) + e_j
+        self._unit_energy_j[unit.name] = \
+            self._unit_energy_j.get(unit.name, 0.0) + e_j
+
+    def energy_report(self) -> Dict[str, object]:
+        """Chip-level energy aggregated over everything served so far."""
+        total = sum(self._unit_energy_j.values())
+        return dict(
+            chip=self.chip_policy.spec.name if self.chip_policy else None,
+            total_j=total,
+            per_unit_j=dict(self._unit_energy_j),
+            tokens_decoded=self.tokens_decoded,
+            j_per_token=(total / self.tokens_decoded
+                         if self.tokens_decoded else 0.0))
 
     # ------------------------------------------------------------------ api
     def submit(self, req: Request):
@@ -63,16 +114,30 @@ class BatchedServer:
             if self._active[slot] is None and self._queue:
                 req = self._queue.pop(0)
                 self._active[slot] = req
+                if self.chip_policy is not None:
+                    req.routed_unit = self.chip_policy.unit_for_phase(
+                        "decode", precision=self._precision).name
                 # prefill one request into the batched cache (single-sample
                 # prefill; a production engine batches same-length prompts)
                 last, cache1 = self.model.prefill(
                     self.params, jnp.asarray(req.prompt[None]),
                     max_len=self.max_len)
+                # the prefill charge covers the whole prompt forward pass,
+                # including the logits that produce the first output token —
+                # decode charges start with the first decode_step
+                self._charge(req, "prefill",
+                             self.flops_per_token * len(req.prompt))
                 self._write_slot_cache(slot, cache1)
                 self._slot_len[slot] = len(req.prompt)
                 tok = int(jnp.argmax(last, -1)[0])
                 req.output.append(tok)
+                self.tokens_decoded += 1
                 self._next_tok[slot, 0] = tok
+                if len(req.output) >= req.max_new_tokens:
+                    # token budget already met by the prefill logits: finish
+                    # without decoding past it and recycle the slot
+                    req.done = True
+                    self._active[slot] = None
 
     def _write_slot_cache(self, slot, cache1):
         def write(dst, src):
@@ -115,6 +180,8 @@ class BatchedServer:
             self._slot_len[slot] += 1
             tok = int(toks[slot])
             req.output.append(tok)
+            self.tokens_decoded += 1
+            self._charge(req, "decode", self.flops_per_token)
             self._next_tok[slot, 0] = tok
             if req.deadline_s is not None and now > req.deadline_s:
                 req.expired = True

@@ -1,0 +1,154 @@
+"""Serving engine under the chip facade: deadline expiry must release slots
+for queued traffic, and per-request energy telemetry must be accounted on
+the chip's routed units — with expired requests reporting the *partial*
+energy they actually burned."""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import chip
+from repro.core.energy_model import calibrate
+from repro.models import LM
+from repro.serve.engine import BatchedServer, Request
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = calibrate()
+    policy = chip.ChipPolicy(chip.fabricated_chip("sp", params), params)
+    cfg = get_config("tinyllama-1.1b").reduced()
+    model = LM(cfg)
+    model_params = model.init(jax.random.key(3))
+    return policy, cfg, model, model_params
+
+
+def _server(setup, slots=2, max_len=32):
+    policy, cfg, model, model_params = setup
+    return BatchedServer(model, model_params, slots=slots, max_len=max_len,
+                         chip_policy=policy)
+
+
+def _prompts(cfg, n, rng=None):
+    rng = rng or np.random.default_rng(7)
+    return [rng.integers(0, cfg.vocab_size, 4 + i % 3).astype(np.int32)
+            for i in range(n)]
+
+
+def test_requests_tagged_with_routed_unit_and_charged(setup):
+    policy, cfg, _, _ = setup
+    server = _server(setup)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=4)
+            for i, p in enumerate(_prompts(cfg, 3))]
+    for r in reqs:
+        server.submit(r)
+    for _ in range(30):
+        if server.step() == 0:
+            break
+    decode_unit = policy.unit_for_phase("decode", precision="sp")
+    prefill_unit = policy.unit_for_phase("prefill", precision="sp")
+    fpt = server.flops_per_token
+    assert fpt > 0
+    for r in reqs:
+        assert r.done and not r.expired
+        assert r.routed_unit == decode_unit.name == "sp_cma"
+        # exact accounting: the prompt forward pass (which also yields the
+        # first output token's logits) on the prefill unit, then one
+        # flops_per_token charge per decode-step token on the decode unit
+        want_decode = ((len(r.output) - 1) * fpt
+                       * decode_unit.e_per_flop_pj * 1e-12)
+        want_prefill = (len(r.prompt) * fpt
+                        * prefill_unit.e_per_flop_pj * 1e-12)
+        assert r.unit_energy_j[decode_unit.name] == \
+            pytest.approx(want_decode)
+        assert r.unit_energy_j[prefill_unit.name] == \
+            pytest.approx(want_prefill)
+        assert r.energy_j == pytest.approx(want_decode + want_prefill)
+
+
+def test_single_token_budget_stops_at_prefill(setup):
+    """max_new_tokens=1 is satisfied by the prefill logits: exactly one
+    token out, no decode-unit charge, slot recycled immediately."""
+    policy, cfg, _, _ = setup
+    server = _server(setup, slots=1)
+    one = Request(uid=0, prompt=_prompts(cfg, 1)[0], max_new_tokens=1)
+    server.submit(one)
+    server.step()
+    assert one.done and len(one.output) == 1
+    assert server._active == [None]
+    decode_unit = policy.unit_for_phase("decode", precision="sp").name
+    assert decode_unit not in one.unit_energy_j  # no decode step ran
+    assert one.energy_j > 0  # but the prefill pass was charged
+
+
+def test_deadline_expiry_releases_slot_and_reports_partial_energy(setup):
+    _, cfg, _, _ = setup
+    server = _server(setup, slots=1)
+    prompts = _prompts(cfg, 2)
+    expired = Request(uid=0, prompt=prompts[0], max_new_tokens=1000,
+                      deadline_s=time.monotonic() - 1.0)  # already past
+    waiting = Request(uid=1, prompt=prompts[1], max_new_tokens=3)
+    server.submit(expired)
+    server.submit(waiting)
+    # first step admits + decodes the expired request once, then expires it
+    server.step()
+    assert expired.expired and expired.done
+    assert len(expired.output) < 1000  # cut off, not served to completion
+    assert server._active == [None]  # slot recycled
+    # partial energy was accounted for the work actually done
+    assert expired.energy_j > 0
+    partial = expired.energy_j
+    for _ in range(10):
+        if server.step() == 0:
+            break
+    assert waiting.done and not waiting.expired
+    assert len(waiting.output) == 3
+    # the expired request's energy is frozen at its partial value
+    assert expired.energy_j == partial
+    # the freed slot really served the queued request
+    assert waiting.energy_j > 0
+
+
+def test_energy_report_aggregates_chip_level(setup):
+    policy, cfg, _, _ = setup
+    server = _server(setup)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=3)
+            for i, p in enumerate(_prompts(cfg, 4))]
+    for r in reqs:
+        server.submit(r)
+    for _ in range(40):
+        if server.step() == 0:
+            break
+    rep = server.energy_report()
+    assert rep["chip"] == policy.spec.name
+    assert rep["tokens_decoded"] == sum(len(r.output) for r in reqs)
+    assert rep["total_j"] == pytest.approx(sum(r.energy_j for r in reqs))
+    # both routed units appear (prefill on sp_fma, decode on sp_cma)
+    assert set(rep["per_unit_j"]) == {"sp_fma", "sp_cma"}
+    assert rep["j_per_token"] == pytest.approx(
+        rep["total_j"] / rep["tokens_decoded"])
+    # ChipPolicy's aggregate helper agrees on the same telemetry
+    agg = chip.ChipPolicy.aggregate_telemetry(
+        [dict(unit=r.routed_unit, energy_j=r.unit_energy_j["sp_cma"])
+         for r in reqs])
+    assert agg["total_j"] == pytest.approx(rep["per_unit_j"]["sp_cma"])
+
+
+def test_engine_without_chip_policy_is_unchanged(setup):
+    """No chip attached -> no tagging, no energy, behavior identical."""
+    _, cfg, model, model_params = setup
+    server = BatchedServer(model, model_params, slots=2, max_len=32)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=3)
+            for i, p in enumerate(_prompts(cfg, 2))]
+    for r in reqs:
+        server.submit(r)
+    for _ in range(20):
+        if server.step() == 0:
+            break
+    for r in reqs:
+        assert r.done
+        assert r.routed_unit == "" and r.energy_j == 0.0
+        assert r.unit_energy_j == {}
+    assert server.energy_report()["chip"] is None
