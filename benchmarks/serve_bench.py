@@ -1,0 +1,125 @@
+"""Serving hot-path benchmark: device-resident fused engine vs the seed
+per-token engine.
+
+Drives identical request waves through ``ReferenceServer`` (the seed: one
+host sync + one energy charge per decoded token, eager single-prompt
+prefill, full cache rebuild per admission) and ``BatchedServer`` (fused
+N-token decode dispatches over donated device-resident state, bucketed
+batched prefill).  Measures:
+
+  * warm decode tokens/sec at 8 slots (the headline: the fused engine must
+    sustain >=5x the seed);
+  * host syncs per decoded token (the fused engine budgets <=1 per N-token
+    dispatch plus one per admitted batch);
+  * output equivalence — both engines must produce bit-identical token
+    streams for every request.
+
+Appends one record to ``results/serve_bench.json`` per run.
+
+Run: PYTHONPATH=src python benchmarks/serve_bench.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.models import LM
+from repro.serve.engine import BatchedServer, ReferenceServer, Request
+
+from bench_lib import append_trajectory, emit
+
+ARCH = "tinyllama-1.1b"
+SLOTS = 8
+MAX_LEN = 64
+N_REQUESTS = 16
+NEW_TOKENS = 24
+DISPATCH_TOKENS = 12
+PROMPT_LENS = (5, 9, 6, 12, 7, 11, 8, 10)  # two admission buckets
+
+
+def make_requests(cfg, uid0=0):
+    rng = np.random.default_rng(uid0 + 1)
+    return [Request(uid=uid0 + i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        PROMPT_LENS[i % len(PROMPT_LENS)]
+                                        ).astype(np.int32),
+                    max_new_tokens=NEW_TOKENS)
+            for i in range(N_REQUESTS)]
+
+
+def drive(server, reqs, *, dispatch_tokens=None):
+    """Submit one wave and serve it to completion; returns (tokens, secs)."""
+    for r in reqs:
+        server.submit(r)
+    t0 = time.perf_counter()
+    if dispatch_tokens is None:  # seed engine: per-token steps
+        for _ in range(10_000):
+            if server.step() == 0:
+                break
+    else:
+        server.run(dispatch_tokens=dispatch_tokens)
+    dt = time.perf_counter() - t0
+    assert all(r.done for r in reqs)
+    return sum(len(r.output) for r in reqs), dt
+
+
+def run():
+    cfg = get_config(ARCH).reduced()
+    model = LM(cfg)
+    params = model.init(jax.random.key(0))
+
+    # --- seed per-token engine: cold wave compiles, then warm waves
+    ref = ReferenceServer(model, params, slots=SLOTS, max_len=MAX_LEN)
+    ref_out = {r.uid % 100: r.output
+               for r in (lambda rs: (drive(ref, rs), rs)[1])(
+                   make_requests(cfg))}
+    ref_tps = 0.0
+    for wave in (100, 200):
+        toks, dt = drive(ref, make_requests(cfg, wave))
+        ref_tps = max(ref_tps, toks / dt)
+    emit("serve_bench.reference_warm", 1e6 / ref_tps,
+         f"tok_per_s={ref_tps:.1f};slots={SLOTS}")
+
+    # --- fused device-resident engine
+    fused = BatchedServer(model, params, slots=SLOTS, max_len=MAX_LEN,
+                          dispatch_tokens=DISPATCH_TOKENS)
+    cold = make_requests(cfg)
+    drive(fused, cold, dispatch_tokens=DISPATCH_TOKENS)
+    fused_out = {r.uid % 100: r.output for r in cold}
+    fused_tps, syncs_per_tok = 0.0, 0.0
+    for wave in (100, 200):
+        s0, t0 = fused.host_syncs, fused.tokens_decoded
+        toks, dt = drive(fused, make_requests(cfg, wave),
+                         dispatch_tokens=DISPATCH_TOKENS)
+        if toks / dt > fused_tps:
+            fused_tps = toks / dt
+            syncs_per_tok = (fused.host_syncs - s0) / (fused.tokens_decoded
+                                                       - t0)
+    emit("serve_bench.fused_warm", 1e6 / fused_tps,
+         f"tok_per_s={fused_tps:.1f};dispatch_tokens={DISPATCH_TOKENS};"
+         f"host_syncs_per_token={syncs_per_tok:.3f}")
+
+    identical = ref_out == fused_out
+    speedup = fused_tps / ref_tps
+    emit("serve_bench.speedup", 0.0,
+         f"speedup={speedup:.1f}x;outputs_identical={identical}")
+    assert identical, "fused engine diverged from the seed token streams"
+
+    path = append_trajectory("serve_bench.json", dict(
+        ts=time.strftime("%Y-%m-%dT%H:%M:%S"),
+        arch=ARCH, slots=SLOTS, max_len=MAX_LEN,
+        requests=N_REQUESTS, new_tokens=NEW_TOKENS,
+        dispatch_tokens=DISPATCH_TOKENS,
+        reference_tok_per_s=ref_tps,
+        fused_tok_per_s=fused_tps,
+        speedup_warm=speedup,
+        host_syncs_per_token=syncs_per_tok,
+        outputs_identical=bool(identical),
+    ))
+    emit("serve_bench.trajectory", 0.0, f"appended={path}")
+    return speedup
+
+
+if __name__ == "__main__":
+    run()

@@ -1,6 +1,9 @@
-"""Batched serving: continuous batching over a reduced assigned arch, with
-the chip routing decode to its latency unit and accounting per-request
-energy on the routed units.
+"""Batched serving: device-resident continuous batching over a reduced
+assigned arch, with chip-aware admission routing — requests are routed to
+the SP or DP decode fleet by their requested precision (and, with
+--deadline-routing, deadline-bound traffic to the latency-class unit and
+bulk traffic to the throughput-class unit), then decoded in fused
+multi-token dispatches with per-unit energy accounted in bulk.
 
 Run: PYTHONPATH=src python examples/serve_decode.py --arch mixtral-8x7b
 """
@@ -11,7 +14,8 @@ import jax
 import numpy as np
 
 from repro.configs.base import ARCH_IDS, get_config
-from repro.core.chip import default_policy
+from repro.core.chip import ChipPolicy, fabricated_chip
+from repro.core.energy_model import calibrate
 from repro.models import LM
 from repro.serve.engine import BatchedServer, Request
 
@@ -19,8 +23,13 @@ from repro.serve.engine import BatchedServer, Request
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b", choices=ARCH_IDS)
-    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--dispatch-tokens", type=int, default=8)
+    ap.add_argument("--deadline-routing", action="store_true",
+                    help="split each precision across latency-class "
+                         "(deadline) and throughput-class (bulk) fleets")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -29,36 +38,41 @@ def main():
                          "use another arch for this example")
     model = LM(cfg)
     params = model.init(jax.random.key(0))
-    chip_policy = default_policy(cfg.numerics_precision)
-    unit = chip_policy.unit_for_phase("decode")
-    policy = unit.numerics()
+    # a full SP+DP die: admission partitions the slots into per-unit fleets
+    tech = calibrate()
+    chip_policy = ChipPolicy(fabricated_chip(None, tech), tech)
+    server = BatchedServer(model, params, slots=args.slots, max_len=64,
+                           chip_policy=chip_policy,
+                           dispatch_tokens=args.dispatch_tokens,
+                           deadline_routing=args.deadline_routing)
     print(f"arch={args.arch} (reduced) | chip {chip_policy.spec.name} "
-          f"routes decode -> {unit.name} [{unit.key}] "
-          f"(style {policy.accum_style}) | "
-          f"avg acc-dep stall: {policy.fpu_design.accum_latency_cycles - 1} "
-          f"cycles (vs {policy.fpu_design.stages - 1} unforwarded)")
+          f"fleets:")
+    for name, rep in server.fleet_report().items():
+        unit = chip_policy.spec.unit(name)
+        print(f"  {name}: slots {rep['slots']} [{unit.key}] "
+              f"{unit.design.precision}/{unit.design.style}")
 
     rng = np.random.default_rng(0)
-    server = BatchedServer(model, params, slots=4, max_len=64,
-                           chip_policy=chip_policy)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab_size, 4 + i % 5
                                         ).astype(np.int32),
-                    max_new_tokens=args.new_tokens)
+                    max_new_tokens=args.new_tokens,
+                    precision="dp" if i % 3 == 0 else "sp",
+                    deadline_s=(time.monotonic() + 30.0) if i % 2 else None)
             for i in range(args.requests)]
     t0 = time.perf_counter()
     for r in reqs:
         server.submit(r)
-    steps = 0
-    while any(not r.done for r in reqs) and steps < 500:
-        server.step()
-        steps += 1
+    finished = server.run(max_steps=500)
     dt = time.perf_counter() - t0
     total = sum(len(r.output) for r in reqs)
-    print(f"{len(reqs)} requests, {total} tokens in {dt:.2f}s "
-          f"({total/dt:.1f} tok/s on CPU, {steps} engine steps)")
-    for r in reqs[:3]:
-        print(f"  req {r.uid}: prompt={r.prompt.tolist()} -> {r.output} "
+    print(f"{len(finished)}/{len(reqs)} requests, {total} tokens in {dt:.2f}s "
+          f"({total/dt:.1f} tok/s on CPU, {server.dispatches} fused "
+          f"dispatches, {server.host_syncs} host syncs)")
+    for r in reqs[:4]:
+        print(f"  req {r.uid} ({r.precision}"
+              f"{', deadline' if r.deadline_s else ''}): "
+              f"prompt={r.prompt.tolist()} -> {r.output} "
               f"[{r.routed_unit}, {r.energy_j*1e6:.2f} uJ]")
     rep = server.energy_report()
     per_unit = {k: f"{v*1e6:.1f}uJ" for k, v in rep["per_unit_j"].items()}

@@ -32,6 +32,7 @@ SPEEDUP_KEYS = {
     "dse_bench.json": "speedup_warm",       # legacy loop / warm vector sweep
     "autotune_bench.json": "speedup_warm",  # cold tune / warm same-shape tune
     "chip_bench.json": "speedup_warm",      # cold chip tune / warm chip tune
+    "serve_bench.json": "speedup_warm",     # seed per-token / fused decode
 }
 
 

@@ -123,6 +123,11 @@ class ChipUnit:
         100%-activity energy)."""
         return self.metric("e_eff_pj")
 
+    def energy_j(self, flops: float) -> float:
+        """Joules attributed to ``flops`` executed on this unit (the bulk
+        form the serving engine charges at dispatch boundaries)."""
+        return flops * self.e_per_flop_pj * 1e-12
+
     @property
     def gflops_effective(self) -> float:
         """Delivered GFLOPS per instance: stalls and idle time included."""
@@ -251,6 +256,39 @@ def unit_energy_telemetry(design: FPUDesign, params: TechParams, *,
 
 
 # ---------------------------------------------------------------------------
+# Fleet partitioning (serving-engine slot assignment)
+# ---------------------------------------------------------------------------
+def partition_slots(n_slots: int, units: Sequence[ChipUnit]
+                    ) -> Dict[str, Tuple[int, ...]]:
+    """Split ``n_slots`` serving slots across ``units`` proportional to
+    their instance counts (largest-remainder rounding, every fleet gets at
+    least one slot).  Returns unit name -> contiguous slot-id tuple."""
+    if not units:
+        raise ValueError("partition_slots needs at least one unit")
+    if n_slots < len(units):
+        raise ValueError(
+            f"{n_slots} slot(s) cannot cover {len(units)} fleet(s): "
+            f"{[u.name for u in units]} — raise the engine slot count or "
+            f"serve fewer precisions/classes")
+    counts = np.asarray([max(1, u.count) for u in units], float)
+    share = counts / counts.sum() * n_slots
+    alloc = np.maximum(1, np.floor(share).astype(int))
+    while alloc.sum() > n_slots:  # the 1-floors can overshoot tiny n_slots
+        alloc[int(np.argmax(alloc))] -= 1
+    order = np.argsort(-(share - np.floor(share)))
+    i = 0
+    while alloc.sum() < n_slots:
+        alloc[order[i % len(units)]] += 1
+        i += 1
+    fleets: Dict[str, Tuple[int, ...]] = {}
+    nxt = 0
+    for u, c in zip(units, alloc):
+        fleets[u.name] = tuple(range(nxt, nxt + int(c)))
+        nxt += int(c)
+    return fleets
+
+
+# ---------------------------------------------------------------------------
 # The facade
 # ---------------------------------------------------------------------------
 #: objective used to break routing ties per workload class (PR 2 API)
@@ -308,6 +346,57 @@ class ChipPolicy:
             unit = cand[obj.argbest(metrics, objective)]
         self._route[key] = unit
         return unit
+
+    def admission_unit(self, precision: Optional[str] = None,
+                       deadline_class: Optional[str] = None) -> ChipUnit:
+        """Admission-time routing for one serving request: which decode
+        fleet serves it.
+
+        ``precision`` picks the SP vs DP fleet; ``deadline_class`` picks the
+        microarchitecture class within it — ``None`` / ``'interactive'``
+        (deadline-bound traffic) routes to the latency-class decode unit,
+        ``'bulk'`` (no deadline, batch traffic) to the throughput-class
+        unit of the same precision, the energy-proportional split the
+        multi-format routing literature argues for.
+        """
+        if deadline_class in (None, "interactive"):
+            return self.unit_for_phase("decode", precision=precision)
+        if deadline_class != "bulk":
+            raise ValueError("deadline_class must be None, 'interactive' or "
+                             f"'bulk', got {deadline_class!r}")
+        # 'bulk' carries no latency tag -> throughput-class competition
+        return self.unit_for_phase("bulk", precision=precision)
+
+    def decode_fleet_units(self, precisions: Optional[Sequence[str]] = None,
+                           deadline_routing: bool = False
+                           ) -> Tuple[ChipUnit, ...]:
+        """The distinct units admission can route decode traffic to — one
+        serving fleet per unit.  ``precisions`` defaults to every precision
+        fabricated on the chip; ``deadline_routing`` adds the
+        throughput-class ('bulk') fleets."""
+        if precisions is None:
+            precisions = sorted({u.design.precision for u in self.spec.units})
+        classes = (None, "bulk") if deadline_routing else (None,)
+        units: List[ChipUnit] = []
+        seen = set()
+        for p in precisions:
+            for c in classes:
+                u = self.admission_unit(precision=p, deadline_class=c)
+                if u.name not in seen:
+                    seen.add(u.name)
+                    units.append(u)
+        return tuple(units)
+
+    def slot_fleets(self, n_slots: int,
+                    precisions: Optional[Sequence[str]] = None,
+                    deadline_routing: bool = False
+                    ) -> Dict[str, Tuple[int, ...]]:
+        """Partition a serving engine's ``n_slots`` decode slots into
+        per-unit fleets (unit name -> slot ids), sized proportional to each
+        unit's instance count on the die."""
+        return partition_slots(
+            n_slots, self.decode_fleet_units(precisions=precisions,
+                                             deadline_routing=deadline_routing))
 
     def select_fpu(self, workload: str, precision: Optional[str] = None
                    ) -> FPUDesign:

@@ -14,6 +14,8 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--new-tokens", type=int, default=12)
     ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--dispatch-tokens", type=int, default=8,
+                    help="fused decode tokens per host dispatch")
     args = ap.parse_args()
 
     import jax
@@ -29,7 +31,8 @@ def main():
     model = LM(cfg)
     params = model.init(jax.random.key(0))
     server = BatchedServer(model, params, slots=args.slots,
-                           max_len=args.max_len)
+                           max_len=args.max_len,
+                           dispatch_tokens=args.dispatch_tokens)
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab_size,
@@ -38,14 +41,11 @@ def main():
             for i in range(args.requests)]
     for r in reqs:
         server.submit(r)
-    steps = 0
-    while any(not r.done for r in reqs) and steps < 2000:
-        server.step()
-        steps += 1
-    done = sum(r.done for r in reqs)
-    toks = sum(len(r.output) for r in reqs)
-    print(f"{done}/{len(reqs)} requests completed, {toks} tokens, "
-          f"{steps} engine steps")
+    finished = server.run(max_steps=2000)
+    toks = sum(len(r.output) for r in finished)
+    print(f"{len(finished)}/{len(reqs)} requests completed, {toks} tokens, "
+          f"{server.dispatches} fused dispatches, "
+          f"{server.host_syncs} host syncs")
 
 
 if __name__ == "__main__":

@@ -286,11 +286,15 @@ class LM:
 
     def apply(self, params, tokens=None, *, prefix_embeds=None,
               frame_embeds=None, policy=None, collect_kv: bool = False,
-              triangle_skip: bool = False, logits_last_only: bool = False):
+              triangle_skip: bool = False, logits_last_only: bool = False,
+              last_index=None):
         """Full-sequence forward. Returns (logits, aux, kv or None).
 
         logits_last_only: unembed only the final position (prefill path —
-        avoids materializing (B,S,V) f32 logits for 32k prompts)."""
+        avoids materializing (B,S,V) f32 logits for 32k prompts).
+        last_index: (B,) per-sample position to unembed instead of the last
+        one (bucket-padded batched prefill: each sample's true final
+        position)."""
         cfg = self.cfg
         x = self._embed_inputs(params, tokens, prefix_embeds, frame_embeds)
         B, S, _ = x.shape
@@ -322,7 +326,9 @@ class LM:
                         x, aux = out
 
         x = rmsnorm(params["final_norm"], x)
-        if logits_last_only:
+        if last_index is not None:
+            x = x[jnp.arange(x.shape[0]), last_index][:, None]
+        elif logits_last_only:
             x = x[:, -1:]
         logits = unembed_apply(params["embed"], x, policy)
         logits = shard(logits, "batch", None, "tensor")
@@ -537,6 +543,73 @@ class LM:
             data["conv"], data["h"] = self._prefill_ssm_states(
                 params, tokens, prefix_embeds, frame_embeds)
         return logits[:, -1], DecodeCache(data, jnp.int32(S))
+
+    def prefill_batched(self, params, tokens, true_lens, *, policy=None):
+        """Bucket-padded batched prefill for the serving engine.
+
+        tokens: (M, Lb) int32 right-padded to one bucket length; true_lens:
+        (M,) actual prompt lengths.  Returns
+        ``(last_logits (M, V), kv or None, ssm_states or None)`` — raw
+        per-layer KV (L_or_apps, M, Lb, Hkv, D) and (conv, h) states for the
+        caller to scatter into a batched decode cache.
+
+        Right-padding is exact for causal-attention families: a pad token
+        can never enter a valid position's context, so the logits at
+        ``true_lens - 1`` are the unpadded logits bit for bit.  SSM/hybrid
+        state carries run *through* pads, so those families must be called
+        with exact lengths (all ``true_lens == Lb``) — the engine's
+        bucketer degenerates to exact-length batching for them.
+        """
+        cfg = self.cfg
+        true_lens = jnp.asarray(true_lens, jnp.int32)
+        collect = cfg.family != "ssm"
+        out = self.apply(params, tokens, policy=policy, collect_kv=collect,
+                         last_index=true_lens - 1)
+        if collect:
+            logits, _, kv = out
+            if not kv:  # hybrid with no shared-attention segment collects []
+                kv = None
+        else:
+            (logits, _), kv = out, None
+        states = None
+        if cfg.family in ("ssm", "hybrid"):
+            states = self._prefill_ssm_states(params, tokens, None, None)
+        return logits[:, 0], kv, states
+
+    def decode_scan(self, params, cache: DecodeCache, tok, active, budget,
+                    n_steps: int, *, pad_id: int = 0, policy=None):
+        """Fused greedy multi-token decode: ``n_steps`` decode_step + argmax
+        iterations in one ``lax.scan`` — a single host dispatch decodes up
+        to ``n_steps`` tokens for every live slot.
+
+        cache.length must be per-slot (B,); tok: (B, 1) next token per slot;
+        active: (B,) bool gates which lanes sample/advance; budget: (B,)
+        int32 remaining tokens per slot.  Inactive lanes still ride the
+        batched step (wasted lanes, the continuous-batching deal) but their
+        length/token/budget are frozen, so their cache writes land beyond
+        their valid length and stay masked.  Lanes deactivate *on device*
+        when their budget hits zero.  Returns
+        ``(cache, tok, active, budget, toks (n, B), emitted (n, B))`` where
+        ``emitted[t, b]`` marks lane b having sampled ``toks[t, b]`` at
+        scan step t.
+        """
+
+        def body(carry, _):
+            cache, tok, active, budget = carry
+            logits, stepped = self.decode_step(params, cache, tok,
+                                               policy=policy)
+            nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+            emit = jnp.where(active, nxt, jnp.int32(pad_id))
+            budget = budget - active.astype(budget.dtype)
+            length = jnp.where(active, stepped.length, cache.length)
+            new_tok = jnp.where(active[:, None], nxt[:, None], tok)
+            new_active = active & (budget > 0)
+            return (DecodeCache(stepped.data, length), new_tok, new_active,
+                    budget), (emit, active)
+
+        (cache, tok, active, budget), (toks, emitted) = lax.scan(
+            body, (cache, tok, active, budget), None, length=n_steps)
+        return cache, tok, active, budget, toks, emitted
 
     def _prefill_ssm_states(self, params, tokens, prefix_embeds,
                             frame_embeds):

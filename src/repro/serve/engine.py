@@ -1,33 +1,64 @@
-"""Batched serving engine: slot-based continuous batching over the decode
-step, with deadline-based straggler handling for request scheduling.
+"""Batched serving engine: device-resident continuous batching over the
+decode step, with chip-aware admission routing across per-unit slot fleets.
 
 The engine drives the LM's prefill/decode steps with a fixed slot count
 (= the compiled decode batch size).  Requests are admitted into free slots;
 finished/expired slots are recycled without recompiling — the production
 pattern for TPU serving (one compiled decode XLA program, rotating traffic).
 
-When a ``repro.core.chip.ChipPolicy`` is attached, every request is tagged
-with the unit the chip routes its decode phase to, and the engine accounts
-per-request energy on the routed units: the prompt forward pass — including
-the logits that produce the first output token — on the prefill unit, and
-each decode-step token on the decode unit.  Expired requests release their
-slot and keep the partial energy accrued so far; ``energy_report()``
-aggregates chip-level.
+Hot-path structure (the device-resident overhaul):
+
+  * **Fused multi-token decode** — greedy sampling is fused into the jitted
+    decode step and ``LM.decode_scan`` decodes up to N tokens per host
+    dispatch, carrying the slot state (per-slot lengths, next token,
+    remaining budget, done flags) as device arrays.  Host syncs drop from
+    one per token to one per N-token dispatch.
+  * **Donated cache buffers** — the batched decode cache and slot-state
+    arrays are donated through the jitted admit/dispatch calls, so XLA
+    updates them in place instead of re-materializing the cache per step.
+  * **Bucketed batched prefill** — prompt lengths are padded up to
+    power-of-two buckets (exact for causal attention: pads never enter a
+    valid position's context) so prefill compiles O(log max_len) programs
+    instead of one per length, and same-bucket queued requests are admitted
+    in one batched prefill + scatter.  SSM/hybrid state carries run through
+    pads, so those families batch at exact lengths instead.
+  * **Bulk energy accounting** — per-slot decoded-token counts accumulate
+    on device inside the dispatch; ``ChipPolicy`` energy is charged once
+    per dispatch boundary instead of per token.
+  * **Chip-aware admission routing** — with a ``ChipPolicy`` attached the
+    slots are partitioned into per-unit fleets (``ChipPolicy.slot_fleets``)
+    and every request is routed to the SP or DP fleet by its requested
+    ``precision`` — and, with ``deadline_routing=True``, by its deadline
+    class (deadline-bound -> latency-class unit, bulk -> throughput-class
+    unit) — at admission.  Energy is accounted on the fleet's unit; the
+    prompt forward pass (including the logits that produce the first
+    output token) on the prefill unit.  Expired requests release their
+    slot and keep the partial energy accrued so far; ``energy_report()``
+    aggregates chip-level.
+
+Deadlines are evaluated against an injected ``clock`` (default
+``time.monotonic``) at dispatch boundaries: a request that expired before a
+step is released without decoding or charging another token; tokens decoded
+in the dispatch during which the deadline passes are kept (the work was
+done).
 
 Greedy sampling only (deterministic; tests compare against per-sample
-decoding).  Temperature/top-k hooks are provided for the examples.
+decoding bit for bit).  The seed per-token engine is preserved as
+``ReferenceServer`` — the equivalence/energy baseline and the benchmark's
+"before" measurement.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import LM
+from repro.models import LM, DecodeCache
 
 
 @dataclasses.dataclass
@@ -36,6 +67,7 @@ class Request:
     prompt: np.ndarray  # (S,) int32
     max_new_tokens: int
     deadline_s: Optional[float] = None
+    precision: Optional[str] = None  # requested fleet precision (sp/dp)
     # filled by the engine
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
@@ -45,12 +77,388 @@ class Request:
     unit_energy_j: Dict[str, float] = dataclasses.field(default_factory=dict)
 
 
-class BatchedServer:
-    """Fixed-slot continuous batching server around one LM.
+def bucket_length(n: int, *, lo: int = 8) -> int:
+    """Power-of-two prompt-length bucket (>= lo) — the prefill pad target."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
 
-    ``chip_policy`` (a ``repro.core.chip.ChipPolicy``) enables per-unit
-    energy telemetry; ``flops_per_token`` defaults to ``2 * active params``
-    of the model config (the roofline inference estimate).
+
+# ---------------------------------------------------------------------------
+# Jitted device kernels (module level: the compile cache is keyed on the LM
+# instance, so fresh servers over the same model reuse warm executables)
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnums=(0, 1, 2),
+                   donate_argnums=(4, 5, 6, 7))
+def _dispatch_jit(model, pad_id, n_steps, params, cache, next_tok, active,
+                  budget):
+    """One fused N-token decode dispatch over all slots."""
+    return model.decode_scan(params, cache, next_tok, active, budget,
+                             n_steps, pad_id=pad_id)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1),
+                   donate_argnums=(3, 4, 5, 6))
+def _admit_jit(model, ring, params, cache, next_tok, active, budget,
+               tokens, true_lens, slot_ids, budgets):
+    """Batched same-bucket admission: one prefill forward over the admitted
+    prompts + in-place scatter of KV/states and slot state into the batched
+    cache (buffers donated -> XLA updates in place).
+
+    Padded lanes carry ``slot_ids == n_slots`` (out of bounds) and are
+    dropped by the scatters.  ``ring`` marks ring (sliding-window) KV
+    caches, whose writes must be ring-aligned when a prompt exceeds the
+    window.
+    """
+    last_logits, kv, states = model.prefill_batched(params, tokens,
+                                                    true_lens)
+    first = jnp.argmax(last_logits, -1).astype(jnp.int32)
+    data = dict(cache.data)
+    if kv is not None:
+        k, v = kv  # (L_or_apps, M, Lb, Hkv, D), already cache dtype
+        smax = data["k"].shape[2]
+        Lb = k.shape[2]
+        # a bucket wider than the cache can only be a ring (sliding-window)
+        # cache: non-ring engines cap both the bucket and the prompt length
+        # at the cache width
+        if Lb <= smax:
+            data["k"] = data["k"].at[:, slot_ids, :Lb].set(k, mode="drop")
+            data["v"] = data["v"].at[:, slot_ids, :Lb].set(v, mode="drop")
+        else:
+            assert ring, "bucket wider than a non-ring cache"
+            # keep the window tail, ring-aligned so position p sits at slot
+            # p % smax (where decode writes next); clip handles short
+            # prompts (their out-of-range slots are masked until decode
+            # overwrites them)
+            j = jnp.arange(smax)
+            base = true_lens[:, None] - smax
+            p = jnp.clip(base + ((j[None, :] - base) % smax), 0, Lb - 1)
+            idx = p[None, :, :, None, None]
+            data["k"] = data["k"].at[:, slot_ids].set(
+                jnp.take_along_axis(k, idx, axis=2), mode="drop")
+            data["v"] = data["v"].at[:, slot_ids].set(
+                jnp.take_along_axis(v, idx, axis=2), mode="drop")
+    if states is not None:
+        conv, h = states
+        data["conv"] = data["conv"].at[:, slot_ids].set(conv, mode="drop")
+        data["h"] = data["h"].at[:, slot_ids].set(h, mode="drop")
+    length = cache.length.at[slot_ids].set(true_lens, mode="drop")
+    next_tok = next_tok.at[slot_ids, 0].set(first, mode="drop")
+    budget = budget.at[slot_ids].set(budgets, mode="drop")
+    active = active.at[slot_ids].set(budgets > 0, mode="drop")
+    return DecodeCache(data, length), next_tok, active, budget, first
+
+
+class BatchedServer:
+    """Fixed-slot, device-resident continuous batching server around one LM.
+
+    ``chip_policy`` (a ``repro.core.chip.ChipPolicy``) enables fleet
+    routing and per-unit energy telemetry; ``flops_per_token`` defaults to
+    ``2 * active params`` of the model config (the roofline inference
+    estimate).  ``dispatch_tokens`` is the fused decode depth ``run()``
+    uses per host dispatch; ``clock`` is the deadline time source
+    (injectable for deterministic tests); ``deadline_routing`` splits each
+    precision's traffic across latency-class (deadline-bound) and
+    throughput-class (bulk) fleets.
+    """
+
+    def __init__(self, model: LM, params, *, slots: int, max_len: int,
+                 pad_id: int = 0, chip_policy=None,
+                 flops_per_token: Optional[float] = None,
+                 dispatch_tokens: int = 8,
+                 clock: Callable[[], float] = time.monotonic,
+                 deadline_routing: bool = False,
+                 min_bucket: int = 8):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.pad_id = pad_id
+        self.cfg = model.cfg
+        self.chip_policy = chip_policy
+        self.dispatch_tokens = dispatch_tokens
+        self.min_bucket = min_bucket
+        self._clock = clock
+        self._deadline_routing = deadline_routing
+        self._precision = getattr(self.cfg, "numerics_precision", None)
+        if flops_per_token is None and hasattr(self.cfg,
+                                               "active_param_count"):
+            flops_per_token = 2.0 * self.cfg.active_param_count()
+        self.flops_per_token = flops_per_token or 0.0
+        self.tokens_decoded = 0
+        self.dispatches = 0  # fused decode dispatches issued
+        self.host_syncs = 0  # device->host fetches (admits + dispatches)
+        self._unit_energy_j: Dict[str, float] = {}
+        # SSM/hybrid decode states integrate every prompt token, so bucket
+        # pads would perturb them: those families batch at exact lengths.
+        self._bucketed = self.cfg.family not in ("ssm", "hybrid")
+        # ring (sliding-window) KV caches wrap; everything else caps the
+        # total per-slot length at the cache width
+        self._ring = bool(self.cfg.window) and self.cfg.family != "hybrid"
+        cache = model.init_cache(slots, max_len)
+        self._len_cap = None
+        if "k" in cache.data and not self._ring:
+            self._len_cap = cache.data["k"].shape[2]
+        # device-resident slot state
+        self.cache = DecodeCache(cache.data, jnp.zeros(slots, jnp.int32))
+        self._next_tok = jnp.full((slots, 1), pad_id, jnp.int32)
+        self._budget = jnp.zeros(slots, jnp.int32)
+        self._active_mask = jnp.zeros(slots, bool)
+        # host-side slot table / queues / fleet plan
+        self._active: List[Optional[Request]] = [None] * slots
+        # total tokens the slot's request will get (1 + its device budget;
+        # below max_new_tokens when the cache capacity capped it)
+        self._slot_quota = [0] * slots
+        self.finished: List[Request] = []
+        if chip_policy is None:
+            self._fleets: Dict[str, Tuple[int, ...]] = {
+                "": tuple(range(slots))}
+            self._fleet_units: Dict[str, object] = {"": None}
+        else:
+            self._fleets = chip_policy.slot_fleets(
+                slots, deadline_routing=deadline_routing)
+            self._fleet_units = {name: chip_policy.spec.unit(name)
+                                 for name in self._fleets}
+        self._queues: Dict[str, List[Request]] = {name: []
+                                                  for name in self._fleets}
+
+    # ------------------------------------------------------- chip telemetry
+    def _charge_unit(self, req: Request, unit, flops: float) -> None:
+        """Account ``flops`` on ``unit`` (bulk form, dispatch-boundary)."""
+        if self.chip_policy is None or not flops or unit is None:
+            return
+        e_j = unit.energy_j(flops)
+        req.energy_j += e_j
+        req.unit_energy_j[unit.name] = \
+            req.unit_energy_j.get(unit.name, 0.0) + e_j
+        self._unit_energy_j[unit.name] = \
+            self._unit_energy_j.get(unit.name, 0.0) + e_j
+
+    def _prefill_unit(self, req: Request):
+        if self.chip_policy is None:
+            return None
+        return self.chip_policy.unit_for_phase(
+            "prefill", precision=req.precision or self._precision)
+
+    def energy_report(self) -> Dict[str, object]:
+        """Chip-level energy aggregated over everything served so far."""
+        total = sum(self._unit_energy_j.values())
+        return dict(
+            chip=self.chip_policy.spec.name if self.chip_policy else None,
+            total_j=total,
+            per_unit_j=dict(self._unit_energy_j),
+            tokens_decoded=self.tokens_decoded,
+            j_per_token=(total / self.tokens_decoded
+                         if self.tokens_decoded else 0.0))
+
+    # ------------------------------------------------------------------ api
+    def fleet_report(self) -> Dict[str, Dict[str, object]]:
+        """Per-fleet slot allocation and queue depth."""
+        return {name or "(default)": dict(
+            unit=name or None, slots=list(ids),
+            queued=len(self._queues[name]),
+            active=sum(1 for s in ids if self._active[s] is not None))
+            for name, ids in self._fleets.items()}
+
+    def _route(self, req: Request) -> str:
+        """Admission routing: which fleet serves this request's decode."""
+        if self.chip_policy is None:
+            return ""
+        deadline_class = None
+        if self._deadline_routing:
+            deadline_class = ("interactive" if req.deadline_s is not None
+                             else "bulk")
+        unit = self.chip_policy.admission_unit(
+            precision=req.precision or self._precision,
+            deadline_class=deadline_class)
+        if unit.name not in self._fleets:  # exotic precision: fall back
+            return next(iter(self._fleets))
+        return unit.name
+
+    def submit(self, req: Request):
+        if self._len_cap is not None and len(req.prompt) > self._len_cap:
+            raise ValueError(
+                f"request {req.uid}: prompt length {len(req.prompt)} "
+                f"exceeds the engine cache capacity {self._len_cap}")
+        fleet = self._route(req)
+        if self.chip_policy is not None:
+            req.routed_unit = fleet
+        self._queues[fleet].append(req)
+
+    def _bucket(self, n: int) -> int:
+        if not self._bucketed:
+            return n  # exact-length batching for SSM/hybrid
+        return min(bucket_length(n, lo=self.min_bucket), self._len_cap) \
+            if self._len_cap is not None \
+            else bucket_length(n, lo=self.min_bucket)
+
+    def _finish(self, req: Request):
+        req.done = True
+        self.finished.append(req)
+
+    def _expire(self, req: Request):
+        req.expired = True
+        self._finish(req)
+
+    def _expire_active(self, now: float):
+        """Release slots whose request expired before this step — no more
+        tokens are decoded or charged for them."""
+        released = []
+        for s, req in enumerate(self._active):
+            if req is not None and req.deadline_s is not None \
+                    and now > req.deadline_s:
+                self._expire(req)
+                self._active[s] = None
+                released.append(s)
+        if released:
+            self._active_mask = self._active_mask.at[
+                np.asarray(released, np.int32)].set(False)
+
+    # ---------------------------------------------------------- admission
+    def _admit(self, now: float):
+        for fleet, slot_ids in self._fleets.items():
+            queue = self._queues[fleet]
+            while queue:
+                free = [s for s in slot_ids if self._active[s] is None]
+                if not free:
+                    break
+                # drop requests already expired before admission: zero work,
+                # zero charge
+                batch: List[Request] = []
+                bucket = None
+                i = 0
+                while i < len(queue) and len(batch) < len(free):
+                    req = queue[i]
+                    if req.deadline_s is not None and now > req.deadline_s:
+                        queue.pop(i)
+                        self._expire(req)
+                        continue
+                    b = self._bucket(len(req.prompt))
+                    if bucket is None:
+                        bucket = b
+                    if b == bucket:  # batched same-bucket admission
+                        batch.append(queue.pop(i))
+                        continue
+                    i += 1
+                if not batch:
+                    break
+                self._admit_batch(batch, free[:len(batch)], bucket)
+
+    def _admit_batch(self, reqs: List[Request], slot_ids: List[int],
+                     bucket: int):
+        M = len(reqs)
+        Mb = 1
+        while Mb < M:  # pow2 batch pad bounds prefill compiles at
+            Mb *= 2    # O(log slots x log max_len) programs
+        tokens = np.full((Mb, bucket), self.pad_id, np.int32)
+        true_lens = np.ones(Mb, np.int32)
+        ids = np.full(Mb, self.slots, np.int32)  # OOB pad lanes: dropped
+        budgets = np.zeros(Mb, np.int32)
+        for j, (req, slot) in enumerate(zip(reqs, slot_ids)):
+            tokens[j, :len(req.prompt)] = req.prompt
+            true_lens[j] = len(req.prompt)
+            ids[j] = slot
+            cap = req.max_new_tokens - 1
+            if self._len_cap is not None:
+                cap = min(cap, self._len_cap - len(req.prompt))
+            budgets[j] = max(cap, 0)
+        (self.cache, self._next_tok, self._active_mask, self._budget,
+         first) = _admit_jit(
+            self.model, self._ring, self.params, self.cache, self._next_tok,
+            self._active_mask, self._budget, jnp.asarray(tokens),
+            jnp.asarray(true_lens), jnp.asarray(ids), jnp.asarray(budgets))
+        first = np.asarray(first)  # one host sync per admitted batch
+        self.host_syncs += 1
+        for j, (req, slot) in enumerate(zip(reqs, slot_ids)):
+            # the prefill charge covers the whole prompt forward pass,
+            # including the logits that produce the first output token —
+            # decode charges start with the first fused decode step
+            self._charge_unit(req, self._prefill_unit(req),
+                              self.flops_per_token * len(req.prompt))
+            req.output.append(int(first[j]))
+            self.tokens_decoded += 1
+            if budgets[j] == 0:
+                # token budget already met by the prefill logits (or the
+                # cache is full): finish without occupying the slot
+                self._finish(req)
+            else:
+                self._active[slot] = req
+                self._slot_quota[slot] = 1 + int(budgets[j])
+
+    # ------------------------------------------------------------ decoding
+    def step(self, max_tokens: Optional[int] = None) -> int:
+        """One fused decode dispatch over all active slots (up to
+        ``max_tokens`` tokens each, default 1).  Returns #active slots."""
+        now = self._clock()
+        self._expire_active(now)
+        self._admit(now)
+        active_slots = [s for s, r in enumerate(self._active)
+                        if r is not None]
+        if not active_slots:
+            return 0
+        n = 1 if max_tokens is None else max(1, int(max_tokens))
+        (self.cache, self._next_tok, self._active_mask, self._budget,
+         toks, emitted) = _dispatch_jit(
+            self.model, self.pad_id, n, self.params, self.cache,
+            self._next_tok, self._active_mask, self._budget)
+        # THE host sync: one device_get per N-token dispatch
+        toks_np, emitted_np = jax.device_get((toks, emitted))
+        self.dispatches += 1
+        self.host_syncs += 1
+        now = self._clock()
+        released = []
+        for slot in active_slots:
+            req = self._active[slot]
+            count = int(emitted_np[:, slot].sum())
+            for t in range(n):
+                if emitted_np[t, slot]:
+                    req.output.append(int(toks_np[t, slot]))
+            self.tokens_decoded += count
+            self._charge_unit(req, self._fleet_units.get(req.routed_unit),
+                              self.flops_per_token * count)
+            if count < n or len(req.output) >= self._slot_quota[slot]:
+                # budget exhausted on device (quota < max_new_tokens means
+                # the cache capacity truncated the request)
+                self._finish(req)
+            if not req.done and req.deadline_s is not None \
+                    and now > req.deadline_s:
+                # expired during this dispatch: its tokens were decoded and
+                # stay charged, but the slot is released for queued traffic
+                self._expire(req)
+                released.append(slot)
+            if req.done:
+                self._active[slot] = None
+        if released:
+            self._active_mask = self._active_mask.at[
+                np.asarray(released, np.int32)].set(False)
+        return len(active_slots)
+
+    def run(self, max_steps: int = 10_000,
+            dispatch_tokens: Optional[int] = None) -> List[Request]:
+        """Serve until queues and slots drain (or ``max_steps`` dispatches);
+        returns the requests finished (including expired) since the last
+        ``run`` call."""
+        n = self.dispatch_tokens if dispatch_tokens is None \
+            else dispatch_tokens
+        for _ in range(max_steps):
+            if all(not q for q in self._queues.values()) \
+                    and all(r is None for r in self._active):
+                break
+            self.step(n)
+        out, self.finished = self.finished, []
+        return out
+
+
+# ---------------------------------------------------------------------------
+# The seed per-token engine, frozen as the equivalence / benchmark baseline
+# ---------------------------------------------------------------------------
+class ReferenceServer:
+    """The pre-overhaul engine: one host sync and one ``ChipPolicy`` charge
+    per decoded token, single-prompt eager prefill, full cache rebuild per
+    admission.  Kept as the bitwise/energy baseline the fused engine is
+    tested against and the ``serve_bench`` "before" measurement (only the
+    seed's always-empty ``run()`` return is fixed here too).
     """
 
     def __init__(self, model: LM, params, *, slots: int, max_len: int,
@@ -72,6 +480,7 @@ class BatchedServer:
         self._unit_energy_j: Dict[str, float] = {}
         self._queue: List[Request] = []
         self._active: List[Optional[Request]] = [None] * slots
+        self.finished: List[Request] = []
         # per-slot caches are merged into one batched cache
         self.cache = model.init_cache(slots, max_len)
         self._slot_len = np.zeros(slots, np.int32)
@@ -79,7 +488,6 @@ class BatchedServer:
         self._decode = jax.jit(
             lambda p, c, t: model.decode_step(p, c, t))
 
-    # ------------------------------------------------------- chip telemetry
     def _charge(self, req: Request, phase: str, flops: float) -> None:
         """Account ``flops`` on the unit the chip routes ``phase`` to."""
         if self.chip_policy is None or not flops:
@@ -95,7 +503,6 @@ class BatchedServer:
             self._unit_energy_j.get(unit.name, 0.0) + e_j
 
     def energy_report(self) -> Dict[str, object]:
-        """Chip-level energy aggregated over everything served so far."""
         total = sum(self._unit_energy_j.values())
         return dict(
             chip=self.chip_policy.spec.name if self.chip_policy else None,
@@ -105,7 +512,6 @@ class BatchedServer:
             j_per_token=(total / self.tokens_decoded
                          if self.tokens_decoded else 0.0))
 
-    # ------------------------------------------------------------------ api
     def submit(self, req: Request):
         self._queue.append(req)
 
@@ -117,14 +523,9 @@ class BatchedServer:
                 if self.chip_policy is not None:
                     req.routed_unit = self.chip_policy.unit_for_phase(
                         "decode", precision=self._precision).name
-                # prefill one request into the batched cache (single-sample
-                # prefill; a production engine batches same-length prompts)
                 last, cache1 = self.model.prefill(
                     self.params, jnp.asarray(req.prompt[None]),
                     max_len=self.max_len)
-                # the prefill charge covers the whole prompt forward pass,
-                # including the logits that produce the first output token —
-                # decode charges start with the first decode_step
                 self._charge(req, "prefill",
                              self.flops_per_token * len(req.prompt))
                 self._write_slot_cache(slot, cache1)
@@ -134,17 +535,11 @@ class BatchedServer:
                 self.tokens_decoded += 1
                 self._next_tok[slot, 0] = tok
                 if len(req.output) >= req.max_new_tokens:
-                    # token budget already met by the prefill logits: finish
-                    # without decoding past it and recycle the slot
                     req.done = True
+                    self.finished.append(req)
                     self._active[slot] = None
 
     def _write_slot_cache(self, slot, cache1):
-        def write(dst, src):
-            if dst.ndim >= 2 and dst.shape[1] == self.slots:
-                return dst.at[:, slot:slot + 1].set(
-                    src[:, :1] if src.shape[1] == 1 else src)
-            return dst
         # cache data leaves are (L, B, ...) — batch is axis 1
         new_data = {}
         for k, dst in self.cache.data.items():
@@ -153,8 +548,6 @@ class BatchedServer:
             if k in ("k", "v") and src.shape[2] != dst.shape[2]:
                 pad[2] = (0, dst.shape[2] - src.shape[2])
                 src = jnp.pad(src, pad)
-            if k == "conv" or k == "h":
-                pass
             new_data[k] = dst.at[:, slot].set(src[:, 0])
         self.cache = type(self.cache)(new_data, self.cache.length)
 
@@ -164,10 +557,6 @@ class BatchedServer:
         active = [s for s, r in enumerate(self._active) if r is not None]
         if not active:
             return 0
-        # decode step is batched over ALL slots; inactive slots decode
-        # padding (wasted lanes — the engine keeps them filled under load).
-        # each slot carries its own cache length (per-batch masks + scatter
-        # writes in attn_block_decode).
         cache = self.model.cache_at_length(
             self.cache, jnp.asarray(self._slot_len, jnp.int32))
         logits, cache = self._decode(self.params, cache,
@@ -189,16 +578,19 @@ class BatchedServer:
             if len(req.output) >= req.max_new_tokens:
                 req.done = True
             if req.done:
+                self.finished.append(req)
                 self._active[slot] = None
         return len(active)
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
-        finished: List[Request] = []
+        """Serve until drained; returns the requests finished since the
+        last ``run`` call (the seed returned an always-empty list)."""
         for _ in range(max_steps):
             if not self._queue and all(r is None for r in self._active):
                 break
             self.step()
-        return finished
+        out, self.finished = self.finished, []
+        return out
 
 
 def greedy_decode(model: LM, params, prompt: np.ndarray, n_new: int,

@@ -10,6 +10,16 @@ _SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                     "src")
 
 
+class FakeClock:
+    """Deterministic ``clock`` injectable into the serving engine."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+
 def run_multidevice(code: str, n_devices: int = 8, timeout: int = 560) -> str:
     """Run `code` in a subprocess with n host devices. Raises on failure,
     returns stdout."""

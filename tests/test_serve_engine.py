@@ -1,9 +1,8 @@
 """Serving engine under the chip facade: deadline expiry must release slots
 for queued traffic, and per-request energy telemetry must be accounted on
 the chip's routed units — with expired requests reporting the *partial*
-energy they actually burned."""
-import time
-
+energy they actually burned.  Deadlines run against an injected clock so
+every expiry scenario is deterministic."""
 import jax
 import numpy as np
 import pytest
@@ -13,6 +12,8 @@ from repro.core import chip
 from repro.core.energy_model import calibrate
 from repro.models import LM
 from repro.serve.engine import BatchedServer, Request
+
+from helpers import FakeClock
 
 
 @pytest.fixture(scope="module")
@@ -25,10 +26,10 @@ def setup():
     return policy, cfg, model, model_params
 
 
-def _server(setup, slots=2, max_len=32):
+def _server(setup, slots=2, max_len=32, **kw):
     policy, cfg, model, model_params = setup
     return BatchedServer(model, model_params, slots=slots, max_len=max_len,
-                         chip_policy=policy)
+                         chip_policy=policy, **kw)
 
 
 def _prompts(cfg, n, rng=None):
@@ -85,30 +86,51 @@ def test_single_token_budget_stops_at_prefill(setup):
 
 def test_deadline_expiry_releases_slot_and_reports_partial_energy(setup):
     _, cfg, _, _ = setup
-    server = _server(setup, slots=1)
+    clock = FakeClock(0.0)
+    server = _server(setup, slots=1, clock=clock)
     prompts = _prompts(cfg, 2)
-    expired = Request(uid=0, prompt=prompts[0], max_new_tokens=1000,
-                      deadline_s=time.monotonic() - 1.0)  # already past
+    doomed = Request(uid=0, prompt=prompts[0], max_new_tokens=1000,
+                     deadline_s=5.0)
     waiting = Request(uid=1, prompt=prompts[1], max_new_tokens=3)
-    server.submit(expired)
+    server.submit(doomed)
     server.submit(waiting)
-    # first step admits + decodes the expired request once, then expires it
+    server.step()  # admits + decodes the doomed request within its deadline
+    assert not doomed.done and len(doomed.output) == 2
+    partial = doomed.energy_j
+    n_toks = len(doomed.output)
+    assert partial > 0
+    # deadline passes between dispatches: the request expired *before* the
+    # next step, so that step decodes and charges nothing more for it
+    clock.t = 10.0
     server.step()
-    assert expired.expired and expired.done
-    assert len(expired.output) < 1000  # cut off, not served to completion
-    assert server._active == [None]  # slot recycled
-    # partial energy was accounted for the work actually done
-    assert expired.energy_j > 0
-    partial = expired.energy_j
+    assert doomed.expired and doomed.done
+    assert len(doomed.output) == n_toks  # cut off, no post-expiry token
+    assert doomed.energy_j == partial  # frozen at its partial value
     for _ in range(10):
         if server.step() == 0:
             break
+    assert server._active == [None]  # slot recycled
     assert waiting.done and not waiting.expired
     assert len(waiting.output) == 3
-    # the expired request's energy is frozen at its partial value
-    assert expired.energy_j == partial
+    assert doomed.energy_j == partial
     # the freed slot really served the queued request
     assert waiting.energy_j > 0
+
+
+def test_expired_in_queue_is_dropped_without_admission(setup):
+    """A request whose deadline passed while still queued is never admitted:
+    zero tokens, zero energy, still collected by run()."""
+    _, cfg, _, _ = setup
+    clock = FakeClock(0.0)
+    server = _server(setup, slots=1, clock=clock)
+    stale = Request(uid=0, prompt=_prompts(cfg, 1)[0], max_new_tokens=4,
+                    deadline_s=1.0)
+    server.submit(stale)
+    clock.t = 2.0  # expires before the engine ever steps
+    finished = server.run()
+    assert finished == [stale]
+    assert stale.expired and stale.done
+    assert stale.output == [] and stale.energy_j == 0.0
 
 
 def test_energy_report_aggregates_chip_level(setup):

@@ -1,0 +1,269 @@
+"""Device-resident serving hot path: fused multi-token decode must be
+bitwise-identical to per-sample greedy decoding across prompt-length
+buckets and model families, bucketed prefill must share compiled programs,
+bulk (dispatch-boundary) energy charging must match the seed per-token
+accounting, run() must collect finished work, and chip-aware admission
+must route requests to per-unit fleets."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import chip
+from repro.core.energy_model import calibrate
+from repro.models import LM
+from repro.serve.engine import (BatchedServer, ReferenceServer, Request,
+                                bucket_length, greedy_decode)
+
+from helpers import FakeClock
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    model = LM(cfg)
+    return cfg, model, model.init(jax.random.key(3))
+
+
+def _prompts(cfg, lens, seed=11):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+            for n in lens]
+
+
+# ------------------------------------------------------------- equivalence
+def test_bucket_length():
+    assert [bucket_length(n) for n in (1, 8, 9, 16, 17, 100)] == \
+        [8, 8, 16, 16, 32, 128]
+
+
+def test_fused_decode_bitwise_matches_greedy_across_buckets(dense):
+    """Prompt lengths spanning three pad buckets, more requests than slots
+    (churn), multi-token dispatches: every output must equal the
+    single-sequence reference decoder token for token."""
+    cfg, model, params = dense
+    prompts = _prompts(cfg, (3, 8, 9, 15, 17, 30))
+    refs = [greedy_decode(model, params, p, 7, max_len=64) for p in prompts]
+    server = BatchedServer(model, params, slots=4, max_len=64,
+                           dispatch_tokens=3)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=7)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        server.submit(r)
+    finished = server.run(max_steps=100)
+    assert sorted(r.uid for r in finished) == list(range(len(reqs)))
+    for r, ref in zip(reqs, refs):
+        assert r.output == ref, (r.uid, r.output, ref)
+
+
+@pytest.mark.parametrize("arch", ["mixtral-8x7b", "falcon-mamba-7b",
+                                  "zamba2-1.2b"])
+def test_fused_decode_matches_greedy_other_families(arch):
+    """Sliding-window ring caches (incl. a prompt longer than the window)
+    and exact-length SSM/hybrid batching through the fused path."""
+    cfg = get_config(arch).reduced()
+    model = LM(cfg)
+    params = model.init(jax.random.key(5))
+    lens = (5, 20, 7) if cfg.window else (5, 7, 7)
+    prompts = _prompts(cfg, lens)
+    refs = [greedy_decode(model, params, p, 5, max_len=48) for p in prompts]
+    server = BatchedServer(model, params, slots=2, max_len=48,
+                           dispatch_tokens=4)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=5)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        server.submit(r)
+    server.run(max_steps=100)
+    for r, ref in zip(reqs, refs):
+        assert r.output == ref, (r.uid, r.output, ref)
+
+
+def test_cache_capped_request_finishes_at_dispatch_boundary(dense):
+    """A request whose budget was capped by the cache capacity is finished
+    the moment its device budget drains — no extra dead dispatch — and is
+    marked done (truncated), not expired."""
+    cfg, model, params = dense
+    server = BatchedServer(model, params, slots=1, max_len=32,
+                           dispatch_tokens=4)
+    req = Request(uid=0, prompt=_prompts(cfg, (20,))[0], max_new_tokens=50)
+    server.submit(req)
+    steps = 0
+    for _ in range(20):
+        if server.step(4) == 0 and not any(server._queues.values()):
+            break
+        steps += 1
+    assert req.done and not req.expired
+    assert len(req.output) == 1 + (32 - 20)  # prefill token + capped budget
+    assert steps == 3  # ceil(12 / 4) dispatches, none wasted
+
+
+def test_run_returns_finished_and_expired_requests(dense):
+    """Regression: run() used to return an always-empty list."""
+    cfg, model, params = dense
+    clock = FakeClock(0.0)
+    server = BatchedServer(model, params, slots=2, max_len=32, clock=clock)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=3)
+            for i, p in enumerate(_prompts(cfg, (4, 5, 6)))]
+    reqs.append(Request(uid=3, prompt=_prompts(cfg, (4,))[0],
+                        max_new_tokens=3, deadline_s=-1.0))  # expires queued
+    for r in reqs:
+        server.submit(r)
+    finished = server.run(max_steps=50)
+    assert sorted(r.uid for r in finished) == [0, 1, 2, 3]
+    assert all(r.done for r in finished)
+    assert [r.uid for r in finished if r.expired] == [3]
+    # a second run has nothing new to report
+    assert server.run(max_steps=5) == []
+
+
+def test_bucketed_prefill_shares_compiled_programs(dense):
+    """Two admission waves with different prompt lengths in the same
+    power-of-two bucket must reuse one compiled prefill program."""
+    cfg, model, params = dense
+    from repro.serve import engine as eng
+    server = BatchedServer(model, params, slots=2, max_len=64)
+    base = eng._admit_jit._cache_size()
+    for wave, lens in enumerate(((9, 11), (13, 16))):  # all bucket 16
+        reqs = [Request(uid=10 * wave + i, prompt=p, max_new_tokens=2)
+                for i, p in enumerate(_prompts(cfg, lens))]
+        for r in reqs:
+            server.submit(r)
+        server.run(max_steps=20)
+        assert all(r.done for r in reqs)
+    assert eng._admit_jit._cache_size() - base == 1
+
+
+def test_slot_churn_under_mixed_deadlines(dense):
+    """Expiring and surviving requests interleave through the same slots;
+    survivors' outputs stay bitwise-correct and every slot is recycled."""
+    cfg, model, params = dense
+    prompts = _prompts(cfg, (4, 6, 5, 7, 9, 8))
+    clock = FakeClock(0.0)
+    server = BatchedServer(model, params, slots=2, max_len=32, clock=clock)
+    doomed = [Request(uid=i, prompt=prompts[i], max_new_tokens=50,
+                      deadline_s=float(i + 1)) for i in range(3)]
+    survivors = [Request(uid=10 + i, prompt=prompts[3 + i], max_new_tokens=4)
+                 for i in range(3)]
+    for a, b in zip(doomed, survivors):
+        server.submit(a)
+        server.submit(b)
+    for _ in range(60):
+        clock.t += 1.0  # every step expires the next doomed deadline
+        if server.step() == 0 and not any(server._queues.values()):
+            break
+    assert all(r.done and r.expired for r in doomed)
+    assert all(r.done and not r.expired for r in survivors)
+    refs = [greedy_decode(model, params, r.prompt, 4, max_len=32)
+            for r in survivors]
+    for r, ref in zip(survivors, refs):
+        assert r.output == ref
+    assert server._active == [None, None]
+
+
+# ------------------------------------------------------------------ energy
+def test_bulk_energy_matches_per_token_reference(dense):
+    """Dispatch-boundary (device-counted) charging == the seed's per-token
+    charging, per request and per unit, with identical outputs."""
+    cfg, model, params = dense
+    tech = calibrate()
+    prompts = _prompts(cfg, (4, 9, 6, 12))
+
+    def serve(cls, **kw):
+        policy = chip.ChipPolicy(chip.fabricated_chip("sp", tech), tech)
+        server = cls(model, params, slots=2, max_len=32, chip_policy=policy,
+                     **kw)
+        reqs = [Request(uid=i, prompt=p, max_new_tokens=6)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            server.submit(r)
+        for _ in range(40):
+            if server.step() == 0:
+                break
+        return server, reqs
+
+    ref_server, ref_reqs = serve(ReferenceServer)
+    new_server, new_reqs = serve(BatchedServer)
+    # drain multi-token dispatches too: same totals at coarser granularity
+    bulk_server, bulk_reqs = serve(BatchedServer, dispatch_tokens=4)
+    bulk_server.run(max_steps=10)
+    for ref, a, b in zip(ref_reqs, new_reqs, bulk_reqs):
+        assert a.output == ref.output == b.output
+        assert a.energy_j == pytest.approx(ref.energy_j, rel=1e-9)
+        assert b.energy_j == pytest.approx(ref.energy_j, rel=1e-9)
+        for unit, e in ref.unit_energy_j.items():
+            assert a.unit_energy_j[unit] == pytest.approx(e, rel=1e-9)
+            assert b.unit_energy_j[unit] == pytest.approx(e, rel=1e-9)
+    ref_rep = ref_server.energy_report()
+    for server in (new_server, bulk_server):
+        rep = server.energy_report()
+        assert rep["tokens_decoded"] == ref_rep["tokens_decoded"]
+        for unit, e in ref_rep["per_unit_j"].items():
+            assert rep["per_unit_j"][unit] == pytest.approx(e, rel=1e-9)
+
+
+# ----------------------------------------------------------- fleet routing
+def test_partition_slots_proportional():
+    units = chip.fabricated_chip(None, calibrate()).units
+    cma = [u for u in units if u.design.style == "cma"]
+    fleets = chip.partition_slots(8, cma)
+    assert sorted(fleets) == sorted(u.name for u in cma)
+    all_slots = [s for ids in fleets.values() for s in ids]
+    assert sorted(all_slots) == list(range(8))
+    assert all(len(ids) >= 1 for ids in fleets.values())
+    with pytest.raises(ValueError):
+        chip.partition_slots(1, cma)
+
+
+def test_admission_routing_by_precision(dense):
+    """SP and DP requests land on their precision's decode fleet and are
+    charged on that fleet's unit."""
+    cfg, model, params = dense
+    tech = calibrate()
+    policy = chip.ChipPolicy(chip.fabricated_chip(None, tech), tech)
+    server = BatchedServer(model, params, slots=4, max_len=32,
+                           chip_policy=policy)
+    assert sorted(server._fleets) == ["dp_cma", "sp_cma"]
+    prompts = _prompts(cfg, (4, 5, 6, 7))
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=3,
+                    precision="dp" if i % 2 else "sp")
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        server.submit(r)
+    server.run(max_steps=30)
+    for r in reqs:
+        want = "dp_cma" if r.uid % 2 else "sp_cma"
+        assert r.routed_unit == want
+        assert r.unit_energy_j[want] > 0
+    rep = server.energy_report()
+    assert rep["per_unit_j"]["sp_cma"] > 0
+    assert rep["per_unit_j"]["dp_cma"] > 0
+    fleets = server.fleet_report()
+    assert set(fleets) == {"sp_cma", "dp_cma"}
+    assert all(f["queued"] == 0 and f["active"] == 0
+               for f in fleets.values())
+
+
+def test_admission_routing_by_deadline_class(dense):
+    """With deadline_routing on, deadline-bound traffic rides the
+    latency-class (CMA) fleet and bulk traffic the throughput-class (FMA)
+    fleet of the same precision."""
+    cfg, model, params = dense
+    tech = calibrate()
+    policy = chip.ChipPolicy(chip.fabricated_chip("sp", tech), tech)
+    assert [u.name for u in policy.decode_fleet_units(
+        deadline_routing=True)] == ["sp_cma", "sp_fma"]
+    clock = FakeClock(0.0)
+    server = BatchedServer(model, params, slots=4, max_len=32,
+                           chip_policy=policy, deadline_routing=True,
+                           clock=clock)
+    prompts = _prompts(cfg, (4, 5))
+    interactive = Request(uid=0, prompt=prompts[0], max_new_tokens=3,
+                          deadline_s=1e9)
+    bulk = Request(uid=1, prompt=prompts[1], max_new_tokens=3)
+    server.submit(interactive)
+    server.submit(bulk)
+    server.run(max_steps=20)
+    assert interactive.routed_unit == "sp_cma"
+    assert bulk.routed_unit == "sp_fma"
+    assert interactive.unit_energy_j["sp_cma"] > 0
+    assert bulk.unit_energy_j["sp_fma"] > 0
