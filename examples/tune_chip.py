@@ -72,6 +72,37 @@ def main():
         same = (u.design.name, u.vdd, u.vbb) == (t.design.name, t.vdd, t.vbb)
         print(f"  {u.name:8s} {u.key:44s} == autotune: {same}")
 
+    print("\n=== 4. Accuracy-constrained: formats join the search ===")
+    acc = chip.tune_chip(
+        [chip.PhaseSpec("train_eco", at.GEMM_STREAM, flops_fraction=0.7,
+                        accuracy_slo=5e-2),   # loose: sub-SP tiers allowed
+         chip.PhaseSpec("decode_gold", at.DEPENDENT_CHAIN,
+                        flops_fraction=0.3,
+                        accuracy_slo=1e-7)],  # tight: FP32 only
+        params=params, name="accuracy_tiered")
+    for row in acc.report["units"]:
+        print(f"  {row['unit']:12s} fmt={row.get('fmt', 'fp32'):10s} "
+              f"rel_err={row.get('rel_err', 0.0):.2e} "
+              f"(SLO {row['accuracy_slo']:.0e}) "
+              f"{row['gflops_effective'] / (row['avg_power_mw'] * 1e-3):.0f} "
+              f"GFLOPS/W")
+    eco, gold = acc.spec.units
+    base_w = two.spec.units[0]
+    print(f"  downshift win: {eco.operand_format.name} at "
+          f"{eco.metric('gflops_per_w'):.0f} GFLOPS/W vs fp32 "
+          f"{base_w.metric('gflops_per_w'):.0f} "
+          f"({eco.metric('gflops_per_w') / base_w.metric('gflops_per_w'):.1f}x)"
+          f"; tight phase kept {gold.operand_format.name}")
+    # admission now routes by accuracy class, not just precision string:
+    # bulk (throughput-class) traffic with a loose SLO rides the fp8 unit,
+    # tight-SLO traffic keeps the wide-format unit
+    loose_u = acc.policy.admission_unit(deadline_class="bulk",
+                                        accuracy_slo=5e-2)
+    tight_u = acc.policy.admission_unit(deadline_class="bulk",
+                                        accuracy_slo=1e-7)
+    print(f"  bulk route slo=5e-2 -> {loose_u.name}, "
+          f"slo=1e-7 -> {tight_u.name}")
+
 
 if __name__ == "__main__":
     main()

@@ -33,6 +33,7 @@ SPEEDUP_KEYS = {
     "autotune_bench.json": "speedup_warm",  # cold tune / warm same-shape tune
     "chip_bench.json": "speedup_warm",      # cold chip tune / warm chip tune
     "serve_bench.json": "speedup_warm",     # seed per-token / fused decode
+    "numerics_bench.json": "speedup_warm",  # cold / warm accuracy-SLO tune
 }
 
 

@@ -2,16 +2,24 @@
 
 formats.py          — parameterized binary float formats + RNE quantizer
 softfloat.py        — bit-exact FMA/CMA semantics (fused vs cascade vs fwd)
-fpu_arch.py         — FPGen microarchitecture design space (FPUDesign)
+fpu_arch.py         — FPGen microarchitecture design space (FPUDesign,
+                      incl. transprecision datapath narrowing via with_format)
 energy_model.py     — analytical energy/area/delay model calibrated to Table I
+                      (+ per-format scale factors for the numerics registry)
 dse.py              — design-space explorer + Pareto frontiers (Fig. 3/4)
-objective.py        — shared objective/constraint API (argbest, Pareto axes)
-autotune.py         — workload-aware autotuner over SweepResult (Table I)
+objective.py        — shared objective/constraint API (argbest, Pareto axes,
+                      accuracy_constraint)
+autotune.py         — workload-aware autotuner over SweepResult (Table I);
+                      accuracy_slo/formats add the operand-format search axis
 latency_sim.py      — dependency-trace average-latency-penalty simulator (Fig. 2c)
 body_bias.py        — static/adaptive body-bias energy policies (Fig. 4)
 chip.py             — chip-level heterogeneous-fleet API (ChipSpec/ChipPolicy/tune_chip)
 precision_policy.py — DEPRECATED shim over chip.py (kept for migration)
 trace.py            — dependency-trace extraction from jaxprs + SPEC-like mixes
+
+The consumer-facing format/emulation/accuracy surface is ``repro.numerics``
+(registry, emulated_matmul/emulated_dot, AccuracyModel — see docs/numerics.md);
+this package holds the low-level numerics + the modeling/tuning stack.
 """
 from repro.core.formats import (  # noqa: F401
     FP32, TF32, BF16, FP16, FP8_E4M3, FP8_E5M2, FP64,

@@ -212,20 +212,37 @@ class TuneResult:
     n_points: int
     objective_name: str
     cache_stats: Dict[str, int]
+    #: operand format chosen by a format-joint tune (``formats=`` /
+    #: ``accuracy_slo=``); None on format-agnostic tunes, whose datapath is
+    #: the precision class's native format.
+    fmt: object = None
 
     @property
     def key(self) -> str:
         return f"{self.design.name}@{self.vdd:.3f}V/bb{self.vbb:.2f}"
 
+    @property
+    def format(self):
+        """The tuned operand format (class-native when format-agnostic)."""
+        if self.fmt is not None:
+            return self.fmt
+        from repro.numerics import native_format
+        return native_format(self.design.precision)
+
     def as_dict(self) -> Dict[str, object]:
-        return dict(profile=self.profile.name, design=self.design.name,
-                    vdd=self.vdd, vbb=self.vbb, n_points=self.n_points,
-                    objective=self.objective_name,
-                    e_eff_pj=self.metrics["e_eff_pj"],
-                    gflops_per_w=self.metrics["gflops_per_w"],
-                    gflops_per_mm2=self.metrics["gflops_per_mm2"],
-                    avg_delay_ns=self.metrics["avg_delay_ns"],
-                    freq_ghz=self.metrics["freq_ghz"])
+        out = dict(profile=self.profile.name, design=self.design.name,
+                   vdd=self.vdd, vbb=self.vbb, n_points=self.n_points,
+                   objective=self.objective_name,
+                   e_eff_pj=self.metrics["e_eff_pj"],
+                   gflops_per_w=self.metrics["gflops_per_w"],
+                   gflops_per_mm2=self.metrics["gflops_per_mm2"],
+                   avg_delay_ns=self.metrics["avg_delay_ns"],
+                   freq_ghz=self.metrics["freq_ghz"])
+        if self.fmt is not None:
+            out["fmt"] = self.fmt.name
+            if obj.ACCURACY_METRIC in self.metrics:
+                out[obj.ACCURACY_METRIC] = self.metrics[obj.ACCURACY_METRIC]
+        return out
 
 
 def autotune(profile: WorkloadProfile,
@@ -237,30 +254,80 @@ def autotune(profile: WorkloadProfile,
              anchored: bool = False,
              constraints: Sequence[obj.Constraint] = (),
              cache: SweepExecutableCache | None = DEFAULT_CACHE,
-             vbb_idle: float = 0.0) -> TuneResult:
-    """Search design x (V_DD, V_BB) for the profile's optimal operating point.
+             vbb_idle: float = 0.0,
+             formats: Sequence[object] | None = None,
+             accuracy_slo: float | None = None,
+             accuracy_model=None) -> TuneResult:
+    """Search design x (V_DD, V_BB) [x format] for the profile's optimum.
 
     ``designs`` defaults to the full expanded enumeration for ``precision``;
     pass e.g. the four fabricated units (with ``anchored=True``) to tune
     over silicon-exact numbers.  Warm same-shape calls reuse the compiled
     sweep executable and the penalty cache — only the first tune in a
     process compiles.
+
+    With ``formats`` (candidate operand formats — names or ``FloatFormat``s)
+    and/or ``accuracy_slo`` (normwise-relative-error ceiling, see
+    ``objective.accuracy_constraint``) the search runs *jointly* over FPU
+    structure x electrical point x format: every candidate structure is
+    re-instantiated per format via ``FPUDesign.with_format`` (the calibrated
+    feature model scales the narrowed datapath's energy/area/delay) and an
+    ``rel_err`` column from the exact-rational ``AccuracyModel`` gates
+    feasibility.  ``accuracy_slo`` without ``formats`` searches the full
+    registry ladder of the precision class.  With neither argument the
+    legacy format-agnostic path runs bitwise-unchanged.
     """
     params = params or calibrate()
     designs = list(designs) if designs is not None \
         else enumerate_structures_full(precision)
-    res = sweep_arrays(designs, params, vdd_grid, vbb_grid,
+    if formats is None and accuracy_slo is None:
+        res = sweep_arrays(designs, params, vdd_grid, vbb_grid,
+                           mix=profile.mix(), with_latency=True,
+                           anchored=anchored, cache=cache)
+        attach_workload_metrics(res, profile, params, vbb_idle=vbb_idle)
+        objective = profile.objective()
+        i = res.argbest(objective, constraints)
+        return TuneResult(
+            profile=profile, design=res.design_of(i),
+            vdd=float(res.vdd[i]), vbb=float(res.vbb[i]),
+            metrics={k: float(v[i]) for k, v in res.metrics.items()},
+            index=i, n_points=len(res), objective_name=objective.name,
+            cache_stats=dict(cache.stats) if cache is not None else {})
+
+    from repro import numerics as rn
+    cand = tuple(rn.get_format(f) for f in formats) if formats is not None \
+        else rn.REGISTRY.formats_for(precision)
+    if not cand:
+        raise ValueError("formats candidate set is empty")
+    amodel = accuracy_model or rn.DEFAULT_ACCURACY_MODEL
+    all_designs: List[FPUDesign] = []
+    fmt_of_design: List[object] = []
+    for f in cand:
+        all_designs.extend(d.with_format(f) for d in designs)
+        fmt_of_design.extend([f] * len(designs))
+    res = sweep_arrays(all_designs, params, vdd_grid, vbb_grid,
                        mix=profile.mix(), with_latency=True,
                        anchored=anchored, cache=cache)
     attach_workload_metrics(res, profile, params, vbb_idle=vbb_idle)
+    # per-point numerics error: the (format, accumulation-style) pair's
+    # oracle score (cached inside the model — one exact-rational run per
+    # distinct pair, shared across all electrical points)
+    per_design_err = np.asarray([
+        amodel.rel_err(f, rn.accum_style_for(d.style, d.forwarding))
+        for d, f in zip(all_designs, fmt_of_design)])
+    res.metrics[obj.ACCURACY_METRIC] = per_design_err[res.design_index]
+    cons = tuple(constraints)
+    if accuracy_slo is not None:
+        cons += (obj.accuracy_constraint(accuracy_slo),)
     objective = profile.objective()
-    i = res.argbest(objective, constraints)
+    i = res.argbest(objective, cons)
     return TuneResult(
         profile=profile, design=res.design_of(i),
         vdd=float(res.vdd[i]), vbb=float(res.vbb[i]),
         metrics={k: float(v[i]) for k, v in res.metrics.items()},
         index=i, n_points=len(res), objective_name=objective.name,
-        cache_stats=dict(cache.stats) if cache is not None else {})
+        cache_stats=dict(cache.stats) if cache is not None else {},
+        fmt=fmt_of_design[int(res.design_index[i])])
 
 
 def static_bb_energy(result: TuneResult) -> float:

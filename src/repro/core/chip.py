@@ -52,10 +52,10 @@ def workload_class(phase: str) -> str:
 
 
 def kernel_style_for(design: FPUDesign) -> str:
-    """fma_emu accumulation style modeling a unit's FMAC semantics."""
-    if design.style == "fma":
-        return "fused"
-    return "cascade_fwd" if design.forwarding else "cascade"
+    """Emulation accumulation style modeling a unit's FMAC semantics
+    (delegates to the canonical mapping in ``repro.numerics``)."""
+    from repro.numerics import accum_style_for
+    return accum_style_for(design.style, design.forwarding)
 
 
 # ---------------------------------------------------------------------------
@@ -97,10 +97,34 @@ class ChipUnit:
     phases: Tuple[str, ...] = ()
     activity: float = 1.0
     metrics: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    #: tuned operand format (a ``FloatFormat``) when the unit came out of a
+    #: format-joint tune; None = the precision class's native format.
+    fmt: Optional[FloatFormat] = None
 
     @property
     def key(self) -> str:
         return f"{self.design.name}@{self.vdd:.3f}V/bb{self.vbb:.2f}"
+
+    @property
+    def operand_format(self) -> FloatFormat:
+        """The format this unit's datapath computes in."""
+        if self.fmt is not None:
+            return self.fmt
+        from repro.numerics import native_format
+        return native_format(self.design.precision)
+
+    def rel_err(self, accuracy_model=None) -> float:
+        """The unit's numerics error (RMS normwise relative error of its
+        format x accumulation style on the oracle workload) — the number
+        accuracy-class admission routing compares against a request's SLO.
+        Prefers the ``rel_err`` metric a format-joint tune recorded;
+        otherwise consults the ``AccuracyModel``."""
+        if "rel_err" in self.metrics:
+            return float(self.metrics["rel_err"])
+        from repro.numerics import DEFAULT_ACCURACY_MODEL
+        model = accuracy_model or DEFAULT_ACCURACY_MODEL
+        return model.rel_err(self.operand_format,
+                             kernel_style_for(self.design))
 
     def metric(self, key: str) -> float:
         """Metric column with derivations for rows from latency-free sweeps."""
@@ -147,20 +171,30 @@ class ChipUnit:
         """Fleet average power: pJ/FLOP x delivered GFLOP/s = mW."""
         return self.count * self.e_per_flop_pj * self.gflops_effective
 
-    def numerics(self, fmt: FloatFormat = BF16,
+    def numerics(self, fmt: Optional[FloatFormat] = None,
                  emulate: bool = False) -> NumericsPolicy:
+        """Emulation policy of this unit.  ``fmt=None`` uses the unit's
+        tuned operand format (falling back to bf16, the pre-transprecision
+        model-layer default, for format-agnostic units)."""
+        if fmt is None:
+            fmt = self.fmt if self.fmt is not None else BF16
         return NumericsPolicy(fmt=fmt, accum_style=kernel_style_for(
             self.design), fpu_design=self.design, emulate=emulate)
 
     def as_dict(self) -> Dict[str, object]:
-        return dict(unit=self.name, design=self.design.name, vdd=self.vdd,
-                    vbb=self.vbb, count=self.count, phases=list(self.phases),
-                    activity=self.activity,
-                    area_mm2=self.area_mm2,
-                    gflops_effective=self.count * self.gflops_effective,
-                    e_eff_pj=self.e_per_flop_pj,
-                    avg_power_mw=self.avg_power_mw,
-                    peak_power_mw=self.peak_power_mw)
+        out = dict(unit=self.name, design=self.design.name, vdd=self.vdd,
+                   vbb=self.vbb, count=self.count, phases=list(self.phases),
+                   activity=self.activity,
+                   area_mm2=self.area_mm2,
+                   gflops_effective=self.count * self.gflops_effective,
+                   e_eff_pj=self.e_per_flop_pj,
+                   avg_power_mw=self.avg_power_mw,
+                   peak_power_mw=self.peak_power_mw)
+        if self.fmt is not None:
+            out["fmt"] = self.fmt.name
+            if "rel_err" in self.metrics:
+                out["rel_err"] = float(self.metrics["rel_err"])
+        return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -309,7 +343,8 @@ class ChipPolicy:
     def __init__(self, spec: ChipSpec, params: Optional[TechParams] = None):
         self.spec = spec
         self._params = params
-        self._route: Dict[Tuple[str, Optional[str]], ChipUnit] = {}
+        self._route: Dict[Tuple[str, Optional[str], Optional[float]],
+                          ChipUnit] = {}
 
     @property
     def params(self) -> TechParams:
@@ -324,15 +359,26 @@ class ChipPolicy:
                                 for t in tags) else "throughput"
 
     def unit_for_phase(self, phase: str,
-                       precision: Optional[str] = None) -> ChipUnit:
-        """Route an execution phase (or shape kind / shape name) to a unit."""
-        key = (phase, precision)
+                       precision: Optional[str] = None,
+                       accuracy_slo: Optional[float] = None) -> ChipUnit:
+        """Route an execution phase (or shape kind / shape name) to a unit.
+
+        ``accuracy_slo`` restricts the candidate pool to units whose
+        numerics error (``ChipUnit.rel_err``) meets the ceiling — the
+        accuracy-class analogue of the precision filter.  When no unit on
+        the die meets the SLO the most accurate one is routed (serving
+        degrades to best-effort accuracy rather than rejecting traffic).
+        """
+        key = (phase, precision, accuracy_slo)
         hit = self._route.get(key)
         if hit is not None:
             return hit
         pool = [u for u in self.spec.units
                 if precision is None or u.design.precision == precision]
         pool = pool or list(self.spec.units)
+        if accuracy_slo is not None:
+            ok = [u for u in pool if u.rel_err() <= accuracy_slo]
+            pool = ok or [min(pool, key=lambda u: u.rel_err())]
         exact = [u for u in pool if u.name == phase or phase in u.phases]
         cls = workload_class(phase)
         cand = exact or [u for u in pool if self._unit_class(u) == cls] or pool
@@ -344,11 +390,16 @@ class ChipPolicy:
             metrics = {k: np.asarray([u.metric(k) for u in cand])
                        for k in cols}
             unit = cand[obj.argbest(metrics, objective)]
-        self._route[key] = unit
+        # phase/precision come from small closed sets, but accuracy_slo is
+        # a caller-supplied float: cap the memo so arbitrary per-request
+        # SLO values cannot grow the route cache without bound
+        if len(self._route) < 4096:
+            self._route[key] = unit
         return unit
 
     def admission_unit(self, precision: Optional[str] = None,
-                       deadline_class: Optional[str] = None) -> ChipUnit:
+                       deadline_class: Optional[str] = None,
+                       accuracy_slo: Optional[float] = None) -> ChipUnit:
         """Admission-time routing for one serving request: which decode
         fleet serves it.
 
@@ -357,23 +408,32 @@ class ChipPolicy:
         (deadline-bound traffic) routes to the latency-class decode unit,
         ``'bulk'`` (no deadline, batch traffic) to the throughput-class
         unit of the same precision, the energy-proportional split the
-        multi-format routing literature argues for.
+        multi-format routing literature argues for.  ``accuracy_slo``
+        routes by the request's *accuracy class* instead of (or on top of)
+        its precision string: only units whose format meets the SLO
+        compete, so loose-SLO traffic lands on the cheap sub-SP fleets and
+        tight-SLO traffic keeps the wide-format units.
         """
         if deadline_class in (None, "interactive"):
-            return self.unit_for_phase("decode", precision=precision)
+            return self.unit_for_phase("decode", precision=precision,
+                                       accuracy_slo=accuracy_slo)
         if deadline_class != "bulk":
             raise ValueError("deadline_class must be None, 'interactive' or "
                              f"'bulk', got {deadline_class!r}")
         # 'bulk' carries no latency tag -> throughput-class competition
-        return self.unit_for_phase("bulk", precision=precision)
+        return self.unit_for_phase("bulk", precision=precision,
+                                   accuracy_slo=accuracy_slo)
 
     def decode_fleet_units(self, precisions: Optional[Sequence[str]] = None,
-                           deadline_routing: bool = False
+                           deadline_routing: bool = False,
+                           accuracy_slos: Sequence[Optional[float]] = (None,)
                            ) -> Tuple[ChipUnit, ...]:
         """The distinct units admission can route decode traffic to — one
         serving fleet per unit.  ``precisions`` defaults to every precision
         fabricated on the chip; ``deadline_routing`` adds the
-        throughput-class ('bulk') fleets."""
+        throughput-class ('bulk') fleets; ``accuracy_slos`` lists the
+        accuracy classes admission will serve (each may resolve to a
+        different format's unit)."""
         if precisions is None:
             precisions = sorted({u.design.precision for u in self.spec.units})
         classes = (None, "bulk") if deadline_routing else (None,)
@@ -381,22 +441,26 @@ class ChipPolicy:
         seen = set()
         for p in precisions:
             for c in classes:
-                u = self.admission_unit(precision=p, deadline_class=c)
-                if u.name not in seen:
-                    seen.add(u.name)
-                    units.append(u)
+                for slo in (tuple(accuracy_slos) or (None,)):
+                    u = self.admission_unit(precision=p, deadline_class=c,
+                                            accuracy_slo=slo)
+                    if u.name not in seen:
+                        seen.add(u.name)
+                        units.append(u)
         return tuple(units)
 
     def slot_fleets(self, n_slots: int,
                     precisions: Optional[Sequence[str]] = None,
-                    deadline_routing: bool = False
+                    deadline_routing: bool = False,
+                    accuracy_slos: Sequence[Optional[float]] = (None,)
                     ) -> Dict[str, Tuple[int, ...]]:
         """Partition a serving engine's ``n_slots`` decode slots into
         per-unit fleets (unit name -> slot ids), sized proportional to each
         unit's instance count on the die."""
         return partition_slots(
             n_slots, self.decode_fleet_units(precisions=precisions,
-                                             deadline_routing=deadline_routing))
+                                             deadline_routing=deadline_routing,
+                                             accuracy_slos=accuracy_slos))
 
     def select_fpu(self, workload: str, precision: Optional[str] = None
                    ) -> FPUDesign:
@@ -407,10 +471,17 @@ class ChipPolicy:
         return self.unit_for_phase(workload, precision=precision).design
 
     # -- numerics ----------------------------------------------------------
-    def numerics_for_phase(self, phase: str, fmt: FloatFormat = BF16,
+    def numerics_for_phase(self, phase: str,
+                           fmt: Optional[FloatFormat] = BF16,
                            precision: Optional[str] = None,
+                           accuracy_slo: Optional[float] = None,
                            emulate: bool = False) -> NumericsPolicy:
-        return self.unit_for_phase(phase, precision=precision).numerics(
+        """Policy of the unit routed for ``phase``.  ``fmt=None`` uses the
+        routed unit's tuned operand format (bf16 fallback); the explicit
+        bf16 default keeps the pre-transprecision behavior for positional
+        callers."""
+        return self.unit_for_phase(phase, precision=precision,
+                                   accuracy_slo=accuracy_slo).numerics(
             fmt=fmt, emulate=emulate)
 
     # -- energy ------------------------------------------------------------
@@ -519,7 +590,16 @@ def clear_policy_cache() -> None:
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class PhaseSpec:
-    """One execution phase of the chip workload to provision a unit for."""
+    """One execution phase of the chip workload to provision a unit for.
+
+    ``accuracy_slo`` (normwise-relative-error ceiling) and ``formats``
+    (candidate operand formats) turn the phase's tune into a joint
+    structure x electrical x format search (see ``autotune``): a loose SLO
+    lets a throughput phase downshift to a sub-SP transprecision format, a
+    tight one pins the wide format.  Both default to the chip-level
+    arguments of ``tune_chip``; ``None`` everywhere = the format-agnostic
+    legacy search.
+    """
 
     name: str
     profile: at.WorkloadProfile
@@ -528,6 +608,8 @@ class PhaseSpec:
     designs: Optional[Tuple[FPUDesign, ...]] = None  # default: full enum
     anchored: bool = False
     constraints: Tuple[obj.Constraint, ...] = ()
+    accuracy_slo: Optional[float] = None
+    formats: Optional[Tuple[FloatFormat, ...]] = None
 
 
 def phases_from_config(arch: str,
@@ -613,6 +695,8 @@ def tune_chip(phases: Sequence[PhaseSpec], *,
               vdd_grid: np.ndarray = at.TUNE_VDD_GRID,
               vbb_grid: np.ndarray = at.TUNE_VBB_GRID,
               cache=at.DEFAULT_CACHE,
+              accuracy_slo: Optional[float] = None,
+              accuracy_model=None,
               name: str = "chip") -> ChipTuneResult:
     """Tune a heterogeneous unit mix for a multi-phase workload.
 
@@ -623,6 +707,13 @@ def tune_chip(phases: Sequence[PhaseSpec], *,
     then sized service-balanced under the die-area and TDP budgets.  With
     two phases and open budgets this degenerates to exactly the Table I
     throughput/latency split ``autotune`` picks per workload.
+
+    ``accuracy_slo`` is the chip-level default accuracy ceiling applied to
+    every phase that does not set its own (``PhaseSpec.accuracy_slo``
+    wins); any phase with an SLO or an explicit ``formats`` candidate set
+    searches jointly over structure x electrical point x operand format and
+    its unit carries the tuned ``fmt``.  With no SLO anywhere the search is
+    the format-agnostic legacy path, output-identical to PR 3.
     """
     phases = list(phases)
     if not phases:
@@ -638,14 +729,19 @@ def tune_chip(phases: Sequence[PhaseSpec], *,
                     designs=ph.designs, params=params,
                     vdd_grid=vdd_grid, vbb_grid=vbb_grid,
                     anchored=ph.anchored,
-                    constraints=ph.constraints + budget_cons, cache=cache)
+                    constraints=ph.constraints + budget_cons, cache=cache,
+                    formats=ph.formats,
+                    accuracy_slo=(ph.accuracy_slo if ph.accuracy_slo
+                                  is not None else accuracy_slo),
+                    accuracy_model=accuracy_model)
         for ph in phases
     ]
     counts = _fleet_counts(phases, tunes, area_budget_mm2, tdp_budget_mw)
     units = tuple(
         ChipUnit(ph.name, t.design, t.vdd, t.vbb, count=c,
                  phases=(ph.name, ph.profile.name),
-                 activity=ph.profile.activity, metrics=dict(t.metrics))
+                 activity=ph.profile.activity, metrics=dict(t.metrics),
+                 fmt=t.fmt)
         for ph, t, c in zip(phases, tunes, counts))
     spec = ChipSpec(name, units, area_budget_mm2=area_budget_mm2,
                     tdp_budget_mw=tdp_budget_mw)
@@ -658,6 +754,9 @@ def tune_chip(phases: Sequence[PhaseSpec], *,
                    static_bb_e_pj=static_pj,
                    adaptive_bb_saving=static_pj / t.metrics["e_eff_pj"],
                    n_points=t.n_points, objective=t.objective_name)
+        slo = ph.accuracy_slo if ph.accuracy_slo is not None else accuracy_slo
+        if slo is not None:
+            row["accuracy_slo"] = slo
         per_unit.append(row)
     report = dict(
         chip=spec.as_dict(), units=per_unit,

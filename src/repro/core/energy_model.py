@@ -169,6 +169,13 @@ def _cap_total(pvec, feats):
     return jnp.sum(coeffs * jnp.asarray(feats))
 
 
+def _cap_total_np(pvec, feats) -> float:
+    """NumPy twin of ``_cap_total`` (single design): the one coefficient
+    layout shared by the scalar predictor and the format-scaling hook."""
+    coeffs = np.array([pvec[8], pvec[9], pvec[10], pvec[11], 1.0])
+    return float(np.sum(coeffs * np.asarray(feats)))
+
+
 def _predict_core(pvec, feats, stage_depth, is_cma, vdd, vbb, util=1.0):
     """Vectorized electrical model. pvec: parameter array in _PARAM_SPEC order."""
     tau, alpha, vt0, k_bb, s_dec, s_cap, s_leak, s_area = pvec[:8]
@@ -199,8 +206,7 @@ def _predict_np(pvec, feats, stage_depth, is_cma, vdd, vbb, util=1.0):
     """
     tau, alpha, vt0, k_bb, s_dec, s_cap, s_leak, s_area = pvec[:8]
     speed = pvec[12] if is_cma else pvec[13]
-    coeffs = np.array([pvec[8], pvec[9], pvec[10], pvec[11], 1.0])
-    cap = float(np.sum(coeffs * np.asarray(feats)))
+    cap = _cap_total_np(pvec, feats)
     vdd = np.asarray(vdd, np.float64)
     vbb = np.asarray(vbb, np.float64)
     vt = vt0 - k_bb * vbb
@@ -258,6 +264,36 @@ def predict(d: FPUDesign, params: TechParams, *, util: float = 1.0,
     out["gflops_per_w"] = gflops / (out["p_total_mw"] * 1e-3)
     out["gflops_per_mm2"] = gflops / out["area_mm2"]
     return out
+
+
+# ---------------------------------------------------------------------------
+# Transprecision format scaling (the repro.numerics registry hook)
+# ---------------------------------------------------------------------------
+def format_scale_factors(fmt, style: str = "fma",
+                         params: "TechParams | None" = None,
+                         precision: str | None = None) -> Dict[str, float]:
+    """Energy/area/delay scaling of a datapath sized for ``fmt`` relative to
+    its host precision class (sp for <= 32-bit formats, dp above).
+
+    Computed from the *same* calibrated structural feature model the sweeps
+    use — a canonical fabricated structure of the class is re-evaluated with
+    its significand narrowed via ``FPUDesign.with_format`` — so the
+    registry's per-format scales can never drift from what an actual
+    format-aware tune measures.  Returns ``energy`` (e_op ratio), ``area``
+    (cap/area ratio) and ``delay`` (unpipelined critical-path ratio), all
+    <= 1 for sub-native formats.
+    """
+    precision = precision or ("dp" if fmt.bits > 32 else "sp")
+    base = FABRICATED[f"{precision}_{style}"]
+    narrowed = base.with_format(fmt)
+    if narrowed is base:
+        return dict(energy=1.0, area=1.0, delay=1.0)
+    params = params or calibrate()
+    pvec = params.as_array()
+    ratio = _cap_total_np(pvec, _feature_vector(narrowed)) \
+        / _cap_total_np(pvec, _feature_vector(base))
+    return dict(energy=ratio, area=ratio,
+                delay=logic_depth_fo4(narrowed) / logic_depth_fo4(base))
 
 
 # ---------------------------------------------------------------------------

@@ -94,9 +94,18 @@ REGISTRY: Dict[str, FloatFormat] = {
 
 
 def get_format(name: str) -> FloatFormat:
-    if name not in REGISTRY:
-        raise KeyError(f"unknown format {name!r}; have {sorted(REGISTRY)}")
-    return REGISTRY[name]
+    """Resolve a builtin format name; FPGen points registered in the
+    ``repro.numerics`` registry (the consumer-facing surface this module
+    underpins) resolve here too, so a registered ``e5m7`` works everywhere
+    a format string is accepted."""
+    if name in REGISTRY:
+        return REGISTRY[name]
+    from repro.numerics.registry import REGISTRY as _EXT
+    if name in _EXT:
+        return _EXT.format(name)
+    raise KeyError(f"unknown format {name!r}; have {sorted(REGISTRY)} "
+                   f"plus the repro.numerics registry "
+                   f"{sorted(set(_EXT.names()) - set(REGISTRY))}")
 
 
 # ---------------------------------------------------------------------------

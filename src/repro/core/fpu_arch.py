@@ -34,6 +34,13 @@ class FPUDesign:
     vbb: float = 0.0  # forward body bias (V)
     forwarding: bool = True  # internal un-rounded-result bypass [Trong'07]
     name: str = ""
+    # transprecision datapath narrowing (FPGen supports arbitrary (exp, man)
+    # formats): when set, the significand/exponent widths override the
+    # precision-class defaults and the structural feature model scales the
+    # whole datapath (multiplier array, CPAs, registers) to the new width.
+    # ``precision`` keeps naming the host datapath *class* (sp/dp routing).
+    sig_override: Optional[int] = None
+    exp_override: Optional[int] = None
 
     def __post_init__(self):
         if self.precision not in PRECISIONS:
@@ -46,16 +53,54 @@ class FPUDesign:
             raise ValueError(f"tree {self.tree!r}")
         if self.stages < 2 or self.stages > 10:
             raise ValueError(f"stages {self.stages}")
+        # floors of 1 admit every legal FloatFormat (man_bits=0 formats
+        # have a 1-bit significand incl. the hidden bit; exp_bits >= 1)
+        if self.sig_override is not None and not (
+                1 <= self.sig_override <= 53):
+            raise ValueError(f"sig_override {self.sig_override}")
+        if self.exp_override is not None and not (
+                1 <= self.exp_override <= 11):
+            raise ValueError(f"exp_override {self.exp_override}")
 
     # --- structural quantities --------------------------------------------
     @property
     def sig_bits(self) -> int:
         """Significand width incl. hidden bit."""
+        if self.sig_override is not None:
+            return self.sig_override
         return 24 if self.precision == "sp" else 53
 
     @property
     def exp_bits(self) -> int:
+        if self.exp_override is not None:
+            return self.exp_override
         return 8 if self.precision == "sp" else 11
+
+    @property
+    def is_transprecision(self) -> bool:
+        """True when the datapath is narrowed below the class-native width."""
+        return self.sig_override is not None or self.exp_override is not None
+
+    def with_format(self, fmt) -> "FPUDesign":
+        """The same structure with its datapath sized for ``fmt`` (a
+        ``repro.core.formats.FloatFormat``).
+
+        A format matching the current datapath widths (in particular the
+        class-native format on an un-narrowed structure) returns ``self``
+        unchanged, so native-format sweeps stay bitwise identical to the
+        pre-transprecision paths; any other format renames the design
+        ``<base>@<fmt>`` (re-deriving the base of an already-narrowed
+        variant, so the call is idempotent) — the silicon anchor
+        corrections (keyed by fabricated-unit name) never apply to a
+        narrowed variant.
+        """
+        sig, exp = fmt.man_bits + 1, fmt.exp_bits
+        if sig == self.sig_bits and exp == self.exp_bits:
+            return self
+        base = (self.name or self.style).split("@")[0]
+        return dataclasses.replace(
+            self, sig_override=sig, exp_override=exp,
+            name=f"{base}@{fmt.name}")
 
     @property
     def n_partial_products(self) -> int:

@@ -127,6 +127,30 @@ def axis_costs(metrics: MetricCols, axes: ParetoAxes
     return out[0], out[1]
 
 
+# ---------------------------------------------------------------------------
+# Accuracy constraints (the repro.numerics AccuracyModel hook)
+# ---------------------------------------------------------------------------
+#: metric column carrying each sweep point's emulated-numerics error — the
+#: RMS normwise relative error of the point's (format, accumulation-style)
+#: pair on the AccuracyModel's sampled dot-product workload.  Attached by
+#: ``repro.core.autotune`` when tuning with ``formats=`` / ``accuracy_slo=``.
+ACCURACY_METRIC = "rel_err"
+
+
+def accuracy_constraint(slo: float) -> Constraint:
+    """Feasibility ceiling on the numerics error: ``rel_err <= slo``.
+
+    ``slo`` is the workload's accuracy SLO as a normwise relative error
+    (e.g. ``1e-6`` admits only FP32-or-wider operand formats on typical
+    reductions; ``1e-2`` opens the sub-SP transprecision tiers).  Points
+    whose format/style pair misses the ceiling are infeasible, exactly like
+    an area or TDP budget — accuracy is just another ``Constraint`` row.
+    """
+    if not (slo > 0):
+        raise ValueError(f"accuracy_slo must be positive, got {slo!r}")
+    return Constraint(ACCURACY_METRIC, hi=slo)
+
+
 def workload_objective(name: str, w_area: float, w_delay: float) -> Objective:
     """The autotuner's scalarization: minimize effective energy/FLOP times
     area- and delay-sensitivity powers.

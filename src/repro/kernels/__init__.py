@@ -4,7 +4,7 @@ fma_emu.py         — emulated-precision matmul (fused/cascade/cascade_fwd)
 quantize_kernel.py — elementwise round-to-format
 ssm_scan.py        — fused selective-scan (the Mamba recurrence in VMEM;
                      kills the dominant memory-roofline term of the SSM archs)
-ops.py             — jit'd public wrappers w/ backend dispatch
+ops.py             — adapter re-exporting the repro.numerics emulation API
 ref.py             — pure-jnp oracles (bitwise-matching k-block semantics)
 """
 from repro.kernels.ops import (emulated_matmul, matmul_for_policy,  # noqa: F401

@@ -1,89 +1,15 @@
-"""Jit'd public wrappers around the Pallas kernels.
+"""Jit'd public wrappers around the Pallas kernels — adapters only.
 
-``emulated_matmul`` is the framework entry point used by the numerics
-policies: it dispatches to the Pallas kernel on TPU, to interpret mode on CPU
-(tests/smokes), or to the pure-jnp reference (fastest on CPU for large smoke
-models) — all three compute the identical k-block semantics.
+The emulation entry points (``emulated_matmul`` / ``matmul_for_policy`` /
+``quantize_tensor``) live in ``repro.numerics.emulate`` — the unified
+numerics surface — and are re-exported here for the long-standing kernel-
+level import path.  This module carries no emulation logic of its own
+(enforced by tests/test_numerics.py's import-surface test).
 """
 from __future__ import annotations
 
-import functools
+from repro.numerics.emulate import (  # noqa: F401
+    emulated_matmul, matmul_for_policy, quantize_tensor,
+)
 
-import jax
-import jax.numpy as jnp
-
-from repro.core.formats import FloatFormat, get_format
-from repro.kernels import ref as _ref
-from repro.kernels.fma_emu import fma_emu_matmul
-from repro.kernels.quantize_kernel import quantize_2d, quantize_nd
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def emulated_matmul(
-    a: jax.Array,
-    b: jax.Array,
-    *,
-    fmt: FloatFormat | str,
-    style: str = "fused",
-    out_fmt: FloatFormat | None = None,
-    bk: int = 128,
-    impl: str = "auto",
-) -> jax.Array:
-    """(..., M, K) @ (K, N) with FPMax-emulated numerics.
-
-    impl: 'pallas' | 'interpret' | 'ref' | 'auto'
-      auto -> pallas on TPU, ref on CPU (same numerics, no interpreter cost).
-    """
-    if isinstance(fmt, str):
-        fmt = get_format(fmt)
-    if impl == "auto":
-        impl = "pallas" if _on_tpu() else "ref"
-
-    batch_shape = a.shape[:-2]
-    a2 = a.reshape((-1,) + a.shape[-2:]) if batch_shape else a[None]
-
-    def one(x):
-        if impl == "pallas":
-            return fma_emu_matmul(x, b, fmt=fmt, style=style, out_fmt=out_fmt,
-                                  bk=bk)
-        if impl == "interpret":
-            return fma_emu_matmul(x, b, fmt=fmt, style=style, out_fmt=out_fmt,
-                                  bk=bk, interpret=True)
-        if impl == "ref":
-            return _ref.fma_emu_matmul_ref(x, b, fmt=fmt, style=style,
-                                           out_fmt=out_fmt, bk=bk)
-        raise ValueError(f"unknown impl {impl!r}")
-
-    out = jax.vmap(one)(a2)
-    return out.reshape(batch_shape + out.shape[-2:]) if batch_shape else out[0]
-
-
-def matmul_for_policy(a: jax.Array, b: jax.Array, policy,
-                      **kw) -> jax.Array:
-    """``emulated_matmul`` under a chip ``NumericsPolicy``.
-
-    The format and accumulation style come from the policy of whichever
-    chip unit was routed for the execution phase
-    (``ChipPolicy.numerics_for_phase``), so kernel callers never hand-pick
-    a (fmt, style) pair that could drift from the die's actual units.
-    """
-    return emulated_matmul(a, b, fmt=policy.fmt, style=policy.kernel_style,
-                           **kw)
-
-
-def quantize_tensor(
-    x: jax.Array, *, fmt: FloatFormat | str, impl: str = "auto"
-) -> jax.Array:
-    """Round a tensor onto fmt's grid using the Pallas kernel where it pays."""
-    if isinstance(fmt, str):
-        fmt = get_format(fmt)
-    if impl == "auto":
-        impl = "pallas" if _on_tpu() else "ref"
-    if impl == "pallas":
-        return quantize_nd(x, fmt=fmt)
-    if impl == "interpret":
-        return quantize_nd(x, fmt=fmt, interpret=True)
-    return _ref.quantize_ref(x, fmt=fmt)
+__all__ = ["emulated_matmul", "matmul_for_policy", "quantize_tensor"]

@@ -16,6 +16,13 @@ def main():
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--dispatch-tokens", type=int, default=8,
                     help="fused decode tokens per host dispatch")
+    ap.add_argument("--stop-token", type=int, default=None,
+                    help="EOS-class token id: lanes freeze on device the "
+                         "moment they sample it")
+    ap.add_argument("--accuracy-slo", type=float, default=None,
+                    help="tag every request with this accuracy class "
+                         "(normwise rel_err ceiling; needs a chip policy "
+                         "with accuracy-tiered units to change routing)")
     args = ap.parse_args()
 
     import jax
@@ -30,14 +37,17 @@ def main():
         raise SystemExit("musicgen prompts require the frame-embed stub")
     model = LM(cfg)
     params = model.init(jax.random.key(0))
+    stops = () if args.stop_token is None else (args.stop_token,)
     server = BatchedServer(model, params, slots=args.slots,
                            max_len=args.max_len,
-                           dispatch_tokens=args.dispatch_tokens)
+                           dispatch_tokens=args.dispatch_tokens,
+                           stop_tokens=stops)
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab_size,
                                         3 + i % 6).astype(np.int32),
-                    max_new_tokens=args.new_tokens)
+                    max_new_tokens=args.new_tokens,
+                    accuracy_slo=args.accuracy_slo)
             for i in range(args.requests)]
     for r in reqs:
         server.submit(r)

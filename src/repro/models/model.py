@@ -577,7 +577,8 @@ class LM:
         return logits[:, 0], kv, states
 
     def decode_scan(self, params, cache: DecodeCache, tok, active, budget,
-                    n_steps: int, *, pad_id: int = 0, policy=None):
+                    n_steps: int, *, pad_id: int = 0, policy=None,
+                    stop_tokens: tuple = ()):
         """Fused greedy multi-token decode: ``n_steps`` decode_step + argmax
         iterations in one ``lax.scan`` — a single host dispatch decodes up
         to ``n_steps`` tokens for every live slot.
@@ -588,11 +589,16 @@ class LM:
         batched step (wasted lanes, the continuous-batching deal) but their
         length/token/budget are frozen, so their cache writes land beyond
         their valid length and stay masked.  Lanes deactivate *on device*
-        when their budget hits zero.  Returns
+        when their budget hits zero — or, with ``stop_tokens`` (a static
+        tuple of EOS-class token ids), when they sample a stop token: the
+        stop token itself is still emitted (and counted against the
+        budget), then the lane freezes inside the same dispatch, so no
+        post-EOS tokens are ever decoded or charged.  Returns
         ``(cache, tok, active, budget, toks (n, B), emitted (n, B))`` where
         ``emitted[t, b]`` marks lane b having sampled ``toks[t, b]`` at
         scan step t.
         """
+        stop_tokens = tuple(int(s) for s in stop_tokens)
 
         def body(carry, _):
             cache, tok, active, budget = carry
@@ -604,6 +610,11 @@ class LM:
             length = jnp.where(active, stepped.length, cache.length)
             new_tok = jnp.where(active[:, None], nxt[:, None], tok)
             new_active = active & (budget > 0)
+            if stop_tokens:
+                stopped = jnp.zeros_like(active)
+                for s in stop_tokens:
+                    stopped = stopped | (nxt == jnp.int32(s))
+                new_active = new_active & ~(active & stopped)
             return (DecodeCache(stepped.data, length), new_tok, new_active,
                     budget), (emit, active)
 

@@ -1,48 +1,41 @@
 """Numerics-policy-aware matmul: where the FPMax technique meets the models.
 
+Adapter only: the emulation path lives in ``repro.numerics`` (the unified
+format/emulation surface); this module resolves *which* policy applies —
+an explicit ``NumericsPolicy``, or the one the chip facade routes for an
+execution phase — and hands the computation to
+``repro.numerics.policy_matmul`` / ``emulated_matmul``.  It carries no
+emulation logic of its own (enforced by tests/test_numerics.py).
+
 Full-scale dry-run cells run native bf16/f32 einsums (the TPU MXU path whose
 roofline we analyze).  Smoke-scale and numerics-study runs route through the
-fma_emu Pallas kernel semantics, so any generated FPU format/accumulation
-style can be evaluated end-to-end on a real model.
-
-The ``NumericsPolicy`` consumed here comes from the chip facade
-(``repro.core.chip``): ``ChipPolicy.numerics_for_phase(phase, emulate=True)``
-returns the policy of the unit routed for the execution phase, and
-``chip_matmul`` is the one-call path from a chip + phase to an emulated
-matmul under that unit's exact FMAC semantics.
+emulated kernel semantics, so any generated FPU format/accumulation style
+can be evaluated end-to-end on a real model.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
-
-from repro.core.formats import get_format
-from repro.kernels.ops import emulated_matmul
+from repro.numerics import get_format, policy_matmul
 
 
 def matmul(x, w, policy=None):
     """x: (..., K) @ w: (K, N) under an optional NumericsPolicy."""
-    if policy is None or not getattr(policy, "emulate", False):
-        return jnp.matmul(x, w)
-    fmt = policy.fmt if not isinstance(policy.fmt, str) else get_format(policy.fmt)
-    lead = x.shape[:-1]
-    x2 = x.reshape((-1, x.shape[-1]))
-    out = emulated_matmul(x2.astype(jnp.float32), w.astype(jnp.float32),
-                          fmt=fmt, style=policy.accum_style)
-    return out.reshape(lead + (w.shape[-1],)).astype(x.dtype)
+    return policy_matmul(x, w, policy)
 
 
-def chip_matmul(x, w, chip_policy, phase: str, fmt="bf16",
+def chip_matmul(x, w, chip_policy, phase: str, fmt=None,
                 precision: str | None = None):
     """Matmul under the numerics of the chip unit routed for ``phase``.
 
     ``chip_policy`` is a ``repro.core.chip.ChipPolicy``; the routed unit's
-    format/accumulation-style policy is applied through the fma_emu kernel
-    semantics (``emulate=True``).
+    format/accumulation-style policy is applied through the emulated kernel
+    semantics (``emulate=True``).  ``fmt=None`` uses the routed unit's
+    tuned operand format (falling back to bf16, the pre-transprecision
+    default).
     """
-    fmt = get_format(fmt) if isinstance(fmt, str) else fmt
+    fmt = get_format(fmt) if fmt is not None else None
     pol = chip_policy.numerics_for_phase(phase, fmt=fmt,
                                          precision=precision, emulate=True)
-    return matmul(x, w, pol)
+    return policy_matmul(x, w, pol)
 
 
 class EmulatedPolicy:

@@ -1,0 +1,60 @@
+"""``repro.numerics`` — the unified transprecision format / emulation API.
+
+The single consumer surface for "what format / what emulation path / what
+accuracy / what energy" (the FPGen generality FPMax silicon-validates):
+
+  * **formats** — ``FloatFormat`` and the named registry (``REGISTRY`` /
+    ``get_format`` / ``fpgen_format``): IEEE FP64/FP32 plus the
+    transprecision ladder (tf32, bf16, fp16, fp8_e4m3/e5m2) and arbitrary
+    FPGen (exp, man) points, each with energy/area/delay scales derived
+    from the calibrated energy model (``registry.FormatSpec``);
+  * **emulation** — ``emulated_matmul`` / ``emulated_dot`` /
+    ``quantize_tensor`` (jit/vmap-clean; Pallas on TPU, bitwise jnp
+    reference on CPU) plus the bit-exact scalar semantics re-exported from
+    ``repro.core.softfloat`` (``sf_*``, ``dot_fused``, ``dot_cascade``);
+  * **accuracy** — ``AccuracyModel``, the exact-``Fraction`` oracle whose
+    ``rel_err`` feeds ``repro.core.objective.accuracy_constraint`` so
+    ``autotune(..., accuracy_slo=...)`` / ``tune_chip`` search jointly over
+    FPU structure x electrical point x format.
+
+``repro.kernels.ops`` and ``repro.models.numerics`` are thin adapters over
+this package; ``repro.core.formats`` remains the low-level format/quantizer
+home this package builds on.
+"""
+from repro.core.formats import (  # noqa: F401
+    BF16, FP8_E4M3, FP8_E5M2, FP16, FP32, FP64, TF32,
+    FloatFormat, quantize, quantize_stochastic,
+)
+from repro.core.softfloat import (  # noqa: F401
+    dot, dot_cascade, dot_fused, dp_add, dp_cma, dp_fma, dp_mul,
+    quantize64, sf_add, sf_cma, sf_fma, sf_mul,
+)
+from repro.numerics.accuracy import (  # noqa: F401
+    DEFAULT_ACCURACY_MODEL, AccuracyModel, dot_exact_steps, rne_fraction,
+)
+from repro.numerics.emulate import (  # noqa: F401
+    STYLES, accum_style_for, emulated_dot, emulated_matmul,
+    matmul_for_policy, policy_matmul, quantize_tensor,
+)
+from repro.numerics.registry import (  # noqa: F401
+    REGISTRY, FormatRegistry, FormatSpec, fpgen_format, get_format,
+    native_format, register_format,
+)
+
+__all__ = [
+    # formats
+    "FloatFormat", "FP64", "FP32", "TF32", "BF16", "FP16", "FP8_E4M3",
+    "FP8_E5M2", "quantize", "quantize_stochastic",
+    # registry
+    "FormatRegistry", "FormatSpec", "REGISTRY", "get_format",
+    "register_format", "fpgen_format", "native_format",
+    # emulation
+    "STYLES", "accum_style_for", "emulated_matmul", "emulated_dot",
+    "matmul_for_policy", "policy_matmul", "quantize_tensor",
+    "quantize64", "sf_mul", "sf_add", "sf_fma", "sf_cma",
+    "dp_mul", "dp_add", "dp_cma", "dp_fma",
+    "dot", "dot_fused", "dot_cascade",
+    # accuracy
+    "AccuracyModel", "DEFAULT_ACCURACY_MODEL", "dot_exact_steps",
+    "rne_fraction",
+]

@@ -1,0 +1,157 @@
+"""The one emulation surface: matmul / dot / quantize under FPMax semantics.
+
+Every consumer that wants "this computation, under the numerics of that FPU"
+routes through here — ``repro.kernels.ops`` and ``repro.models.numerics`` are
+thin adapters over these entry points and carry no emulation logic of their
+own (enforced by tests/test_numerics.py's import-surface test).
+
+Three granularities, one (format, accumulation-style) vocabulary:
+
+  * ``emulated_matmul`` — the k-block TPU mapping (Pallas kernel on TPU,
+    bitwise-matching pure-jnp reference on CPU, interpret mode for kernel
+    tests);
+  * ``emulated_dot`` — the per-scalar hardware semantics
+    (``softfloat.dot_fused`` / ``dot_cascade``): what a single FMA/CMA unit
+    computes step by step, the oracle granularity;
+  * ``quantize_tensor`` — elementwise round-to-format.
+
+Accumulation styles (see kernels/fma_emu.py for the k-block rationale):
+``'fused'`` (extended accumulator, one final round), ``'cascade'``
+(round-after-add each step) and ``'cascade_fwd'`` (rounded multiplier
+output, un-rounded accumulator — CMA with internal forwarding).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import FloatFormat
+from repro.numerics.registry import get_format
+
+STYLES = ("fused", "cascade", "cascade_fwd")
+
+
+def accum_style_for(style: str, forwarding: bool = True) -> str:
+    """Map an FPU FMAC style ('fma' | 'cma') to the emulation accumulation
+    style — the canonical hardware-to-kernel vocabulary bridge."""
+    if style == "fma":
+        return "fused"
+    if style != "cma":
+        raise ValueError(f"unknown FMAC style {style!r}")
+    return "cascade_fwd" if forwarding else "cascade"
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def emulated_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    fmt: FloatFormat | str,
+    style: str = "fused",
+    out_fmt: FloatFormat | None = None,
+    bk: int = 128,
+    impl: str = "auto",
+) -> jax.Array:
+    """(..., M, K) @ (K, N) with FPMax-emulated numerics.
+
+    impl: 'pallas' | 'interpret' | 'ref' | 'auto'
+      auto -> pallas on TPU, ref on CPU (same numerics, no interpreter cost).
+    """
+    fmt = get_format(fmt)
+    if style not in STYLES:
+        raise ValueError(f"style must be one of {STYLES}, got {style!r}")
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    # the Pallas kernel / its jnp twin are implementation detail, loaded
+    # lazily so the numerics facade never drags the kernels package (or a
+    # TPU toolchain) into import time
+    from repro.kernels import fma_emu as _fma_emu
+    from repro.kernels import ref as _ref
+
+    batch_shape = a.shape[:-2]
+    a2 = a.reshape((-1,) + a.shape[-2:]) if batch_shape else a[None]
+
+    def one(x):
+        if impl == "pallas":
+            return _fma_emu.fma_emu_matmul(x, b, fmt=fmt, style=style,
+                                           out_fmt=out_fmt, bk=bk)
+        if impl == "interpret":
+            return _fma_emu.fma_emu_matmul(x, b, fmt=fmt, style=style,
+                                           out_fmt=out_fmt, bk=bk,
+                                           interpret=True)
+        if impl == "ref":
+            return _ref.fma_emu_matmul_ref(x, b, fmt=fmt, style=style,
+                                           out_fmt=out_fmt, bk=bk)
+        raise ValueError(f"unknown impl {impl!r}")
+
+    out = jax.vmap(one)(a2)
+    return out.reshape(batch_shape + out.shape[-2:]) if batch_shape else out[0]
+
+
+def emulated_dot(a_vec, b_vec, *, fmt: FloatFormat | str,
+                 style: str = "fused") -> jax.Array:
+    """Dot product under the exact per-scalar unit semantics.
+
+    Unlike ``emulated_matmul`` (which models the k-block systolic mapping),
+    this is what the physical FMA/CMA unit computes one operation at a time
+    — the granularity the AccuracyModel oracle certifies.  Shapes:
+    ``(..., K) . (..., K) -> (...,)``; vmap/jit-clean (scan-based).
+    """
+    from repro.core import softfloat as _sf
+    fmt = get_format(fmt)
+    if style == "fused":
+        return _sf.dot_fused(a_vec, b_vec, fmt)
+    if style == "cascade":
+        return _sf.dot_cascade(a_vec, b_vec, fmt, forwarding=False)
+    if style == "cascade_fwd":
+        return _sf.dot_cascade(a_vec, b_vec, fmt, forwarding=True)
+    raise ValueError(f"style must be one of {STYLES}, got {style!r}")
+
+
+def matmul_for_policy(a: jax.Array, b: jax.Array, policy, **kw) -> jax.Array:
+    """``emulated_matmul`` under a chip ``NumericsPolicy``.
+
+    The format and accumulation style come from the policy of whichever
+    chip unit was routed for the execution phase
+    (``ChipPolicy.numerics_for_phase``), so kernel callers never hand-pick
+    a (fmt, style) pair that could drift from the die's actual units.
+    """
+    return emulated_matmul(a, b, fmt=policy.fmt, style=policy.kernel_style,
+                           **kw)
+
+
+def policy_matmul(x, w, policy=None):
+    """x: (..., K) @ w: (K, N) under an optional ``NumericsPolicy``.
+
+    Inert policies (or ``policy=None``) run the native einsum; emulating
+    policies route through ``emulated_matmul`` with the policy's format and
+    accumulation style.  This is the model-layer entry point
+    (``repro.models.numerics.matmul`` adapts to it).
+    """
+    if policy is None or not getattr(policy, "emulate", False):
+        return jnp.matmul(x, w)
+    fmt = get_format(policy.fmt)
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    out = emulated_matmul(x2.astype(jnp.float32), w.astype(jnp.float32),
+                          fmt=fmt, style=policy.accum_style)
+    return out.reshape(lead + (w.shape[-1],)).astype(x.dtype)
+
+
+def quantize_tensor(
+    x: jax.Array, *, fmt: FloatFormat | str, impl: str = "auto"
+) -> jax.Array:
+    """Round a tensor onto fmt's grid using the Pallas kernel where it pays."""
+    fmt = get_format(fmt)
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    from repro.kernels import quantize_kernel as _qk
+    from repro.kernels import ref as _ref
+    if impl == "pallas":
+        return _qk.quantize_nd(x, fmt=fmt)
+    if impl == "interpret":
+        return _qk.quantize_nd(x, fmt=fmt, interpret=True)
+    return _ref.quantize_ref(x, fmt=fmt)

@@ -30,7 +30,16 @@ Hot-path structure (the device-resident overhaul):
     and every request is routed to the SP or DP fleet by its requested
     ``precision`` — and, with ``deadline_routing=True``, by its deadline
     class (deadline-bound -> latency-class unit, bulk -> throughput-class
-    unit) — at admission.  Energy is accounted on the fleet's unit; the
+    unit) — at admission.  Requests may also carry an ``accuracy_slo``
+    (their accuracy *class*): admission then routes to the cheapest fleet
+    whose unit operand format meets the SLO (``accuracy_fleets=`` lists
+    the classes to provision fleets for), the transprecision
+    energy-proportionality argument at serving time.
+  * **EOS / stop tokens** — ``stop_tokens=`` freezes a lane *inside* the
+    fused scan the moment it samples a stop id: the stop token is emitted,
+    nothing after it is decoded or charged, and the slot is recycled at
+    the dispatch boundary (bitwise parity with ``greedy_decode``'s
+    stop-token semantics).  Energy is accounted on the fleet's unit; the
     prompt forward pass (including the logits that produce the first
     output token) on the prefill unit.  Expired requests release their
     slot and keep the partial energy accrued so far; ``energy_report()``
@@ -68,6 +77,10 @@ class Request:
     max_new_tokens: int
     deadline_s: Optional[float] = None
     precision: Optional[str] = None  # requested fleet precision (sp/dp)
+    #: requested accuracy class: max acceptable numerics error (normwise
+    #: relative, the AccuracyModel scale).  Admission routes to the
+    #: cheapest fleet whose unit format meets it; None = don't care.
+    accuracy_slo: Optional[float] = None
     # filled by the engine
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
@@ -89,13 +102,14 @@ def bucket_length(n: int, *, lo: int = 8) -> int:
 # Jitted device kernels (module level: the compile cache is keyed on the LM
 # instance, so fresh servers over the same model reuse warm executables)
 # ---------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnums=(0, 1, 2),
-                   donate_argnums=(4, 5, 6, 7))
-def _dispatch_jit(model, pad_id, n_steps, params, cache, next_tok, active,
-                  budget):
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3),
+                   donate_argnums=(5, 6, 7, 8))
+def _dispatch_jit(model, pad_id, n_steps, stop_tokens, params, cache,
+                  next_tok, active, budget):
     """One fused N-token decode dispatch over all slots."""
     return model.decode_scan(params, cache, next_tok, active, budget,
-                             n_steps, pad_id=pad_id)
+                             n_steps, pad_id=pad_id,
+                             stop_tokens=stop_tokens)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1),
@@ -169,6 +183,8 @@ class BatchedServer:
                  dispatch_tokens: int = 8,
                  clock: Callable[[], float] = time.monotonic,
                  deadline_routing: bool = False,
+                 accuracy_fleets: Tuple[float, ...] = (),
+                 stop_tokens: Tuple[int, ...] = (),
                  min_bucket: int = 8):
         self.model = model
         self.params = params
@@ -179,8 +195,15 @@ class BatchedServer:
         self.chip_policy = chip_policy
         self.dispatch_tokens = dispatch_tokens
         self.min_bucket = min_bucket
+        # EOS-class token ids: a lane freezes on device the moment it
+        # samples one (the stop token is emitted, nothing after it)
+        self.stop_tokens = tuple(int(s) for s in stop_tokens)
+        self._stop_set = set(self.stop_tokens)
         self._clock = clock
         self._deadline_routing = deadline_routing
+        # accuracy classes (SLOs) admission provisions fleets for, on top
+        # of the don't-care class
+        self._accuracy_fleets = tuple(accuracy_fleets)
         self._precision = getattr(self.cfg, "numerics_precision", None)
         if flops_per_token is None and hasattr(self.cfg,
                                                "active_param_count"):
@@ -217,7 +240,8 @@ class BatchedServer:
             self._fleet_units: Dict[str, object] = {"": None}
         else:
             self._fleets = chip_policy.slot_fleets(
-                slots, deadline_routing=deadline_routing)
+                slots, deadline_routing=deadline_routing,
+                accuracy_slos=(None,) + self._accuracy_fleets)
             self._fleet_units = {name: chip_policy.spec.unit(name)
                                  for name in self._fleets}
         self._queues: Dict[str, List[Request]] = {name: []
@@ -271,9 +295,30 @@ class BatchedServer:
                              else "bulk")
         unit = self.chip_policy.admission_unit(
             precision=req.precision or self._precision,
-            deadline_class=deadline_class)
-        if unit.name not in self._fleets:  # exotic precision: fall back
-            return next(iter(self._fleets))
+            deadline_class=deadline_class,
+            accuracy_slo=req.accuracy_slo)
+        if unit.name not in self._fleets:
+            # the chip routed a unit no fleet was provisioned for.  For
+            # accuracy-tagged traffic, re-resolve against the *provisioned*
+            # units: cheapest fleet meeting the SLO, else the most accurate
+            # one (degrade, never silently violate harder than necessary).
+            # The requested precision stays a hard pre-filter (as in
+            # unit_for_phase) whenever any same-precision fleet exists.
+            if req.accuracy_slo is not None:
+                units = [(n, u) for n, u in self._fleet_units.items()
+                         if u is not None]
+                want_p = req.precision or self._precision
+                if want_p is not None:
+                    same_p = [(n, u) for n, u in units
+                              if u.design.precision == want_p]
+                    units = same_p or units
+                ok = [(n, u) for n, u in units
+                      if u.rel_err() <= req.accuracy_slo]
+                if ok:
+                    return min(ok, key=lambda nu: nu[1].e_per_flop_pj)[0]
+                if units:
+                    return min(units, key=lambda nu: nu[1].rel_err())[0]
+            return next(iter(self._fleets))  # exotic precision: fall back
         return unit.name
 
     def submit(self, req: Request):
@@ -370,6 +415,7 @@ class BatchedServer:
             jnp.asarray(true_lens), jnp.asarray(ids), jnp.asarray(budgets))
         first = np.asarray(first)  # one host sync per admitted batch
         self.host_syncs += 1
+        dead = []
         for j, (req, slot) in enumerate(zip(reqs, slot_ids)):
             # the prefill charge covers the whole prompt forward pass,
             # including the logits that produce the first output token —
@@ -378,13 +424,23 @@ class BatchedServer:
                               self.flops_per_token * len(req.prompt))
             req.output.append(int(first[j]))
             self.tokens_decoded += 1
-            if budgets[j] == 0:
+            if budgets[j] == 0 or int(first[j]) in self._stop_set:
                 # token budget already met by the prefill logits (or the
-                # cache is full): finish without occupying the slot
+                # cache is full, or the very first token is an EOS):
+                # finish without occupying the slot
                 self._finish(req)
+                if budgets[j] > 0:
+                    # _admit_jit activated the lane from its budget; a
+                    # first-token EOS must also free it on device or later
+                    # dispatches decode zombie tokens for a slot the host
+                    # already recycled
+                    dead.append(slot)
             else:
                 self._active[slot] = req
                 self._slot_quota[slot] = 1 + int(budgets[j])
+        if dead:
+            self._active_mask = self._active_mask.at[
+                np.asarray(dead, np.int32)].set(False)
 
     # ------------------------------------------------------------ decoding
     def step(self, max_tokens: Optional[int] = None) -> int:
@@ -400,8 +456,8 @@ class BatchedServer:
         n = 1 if max_tokens is None else max(1, int(max_tokens))
         (self.cache, self._next_tok, self._active_mask, self._budget,
          toks, emitted) = _dispatch_jit(
-            self.model, self.pad_id, n, self.params, self.cache,
-            self._next_tok, self._active_mask, self._budget)
+            self.model, self.pad_id, n, self.stop_tokens, self.params,
+            self.cache, self._next_tok, self._active_mask, self._budget)
         # THE host sync: one device_get per N-token dispatch
         toks_np, emitted_np = jax.device_get((toks, emitted))
         self.dispatches += 1
@@ -417,9 +473,14 @@ class BatchedServer:
             self.tokens_decoded += count
             self._charge_unit(req, self._fleet_units.get(req.routed_unit),
                               self.flops_per_token * count)
-            if count < n or len(req.output) >= self._slot_quota[slot]:
-                # budget exhausted on device (quota < max_new_tokens means
-                # the cache capacity truncated the request)
+            if count < n or len(req.output) >= self._slot_quota[slot] \
+                    or (count and int(toks_np[count - 1, slot])
+                        in self._stop_set):
+                # budget exhausted on device, or the lane sampled an EOS
+                # token (a stop in the final scan step yields count == n
+                # with the lane already frozen — finish it here instead of
+                # wasting a dead dispatch); quota < max_new_tokens means
+                # the cache capacity truncated the request
                 self._finish(req)
             if not req.done and req.deadline_s is not None \
                     and now > req.deadline_s:
@@ -594,14 +655,23 @@ class ReferenceServer:
 
 
 def greedy_decode(model: LM, params, prompt: np.ndarray, n_new: int,
-                  max_len: Optional[int] = None) -> List[int]:
-    """Single-sequence reference decoder (tests compare server vs this)."""
+                  max_len: Optional[int] = None,
+                  stop_tokens: Tuple[int, ...] = ()) -> List[int]:
+    """Single-sequence reference decoder (tests compare server vs this).
+
+    ``stop_tokens``: EOS-class ids — decoding stops after emitting one
+    (the stop token is included in the output), the semantics the fused
+    ``decode_scan`` implements on device.
+    """
+    stops = set(int(s) for s in stop_tokens)
     max_len = max_len or (len(prompt) + n_new)
     last, cache = model.prefill(params, jnp.asarray(prompt[None]),
                                 max_len=max_len)
     out = [int(jnp.argmax(last, -1)[0])]
     tok = jnp.asarray([[out[-1]]], jnp.int32)
     for _ in range(n_new - 1):
+        if out[-1] in stops:
+            break
         logits, cache = model.decode_step(params, cache, tok)
         nxt = int(jnp.argmax(logits[:, -1], -1)[0])
         out.append(nxt)

@@ -20,6 +20,19 @@ class FakeClock:
         return self.t
 
 
+def make_chip_unit(name, fmt, rel_err, e_pj, phases=()):
+    """Synthetic ChipUnit with a self-consistent metrics row — the accuracy
+    routing tests build tiered dies from these without running a tune."""
+    from repro.core import chip
+    from repro.core.fpu_arch import FABRICATED
+    metrics = dict(freq_ghz=1.0, cycle_ns=1.0, p_total_mw=2e3 * e_pj,
+                   area_mm2=0.01, gflops_per_w=1.0 / (e_pj * 1e-3),
+                   gflops_per_mm2=200.0, e_eff_pj=e_pj, rel_err=rel_err,
+                   avg_latency_penalty=0.0)
+    return chip.ChipUnit(name, FABRICATED["sp_cma"], 0.8, 1.2,
+                         phases=phases, metrics=metrics, fmt=fmt)
+
+
 def run_multidevice(code: str, n_devices: int = 8, timeout: int = 560) -> str:
     """Run `code` in a subprocess with n host devices. Raises on failure,
     returns stdout."""

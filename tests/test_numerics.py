@@ -1,0 +1,361 @@
+"""repro.numerics: the unified transprecision format/emulation surface.
+
+Covers the registry (named tiers + FPGen points + energy/area scales from
+the calibrated model), the emulation API (kernels/ops and models/numerics
+must be logic-free adapters — the import-surface test), the exact-rational
+AccuracyModel (parity with the bit-exact softfloat semantics), and
+accuracy-constrained tuning: a loose SLO downshifts a throughput phase to a
+sub-SP format for a GFLOPS/W win, a tight SLO correctly refuses, and the
+unconstrained path stays golden-identical to the PR 3 tuner.
+"""
+import inspect
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.numerics as rn
+from repro.core import autotune as at
+from repro.core import chip
+from repro.core import objective as obj
+from repro.core.dse import enumerate_structures
+from repro.core.energy_model import (SweepExecutableCache, calibrate,
+                                     format_scale_factors, predict)
+from repro.core.formats import BF16, FP8_E4M3, FP32, FP64, FloatFormat
+from repro.core.fpu_arch import FABRICATED
+
+# Small grids / restricted structural enumeration keep the sweeps fast
+# (same pattern as tests/test_chip.py); benchmarks run the full grids.
+VDD = np.round(np.arange(0.55, 1.101, 0.05), 3)
+VBB = np.round(np.arange(0.0, 1.21, 0.3), 2)
+
+#: small candidate ladder for format-joint tunes (full registry in benches)
+TIERS = (FP32, BF16, FP8_E4M3)
+
+#: fast oracle for tuning tests (coarser sampling than the default model)
+ORACLE = rn.AccuracyModel(k=32, n_samples=8)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return calibrate()
+
+
+@pytest.fixture(scope="module")
+def cache():
+    return SweepExecutableCache()
+
+
+@pytest.fixture(scope="module")
+def designs():
+    return tuple(enumerate_structures("sp"))
+
+
+# ---------------------------------------------------------------- registry
+def test_registry_carries_the_transprecision_ladder():
+    names = rn.REGISTRY.names()
+    for n in ("fp64", "fp32", "tf32", "bf16", "fp16", "fp8_e4m3",
+              "fp8_e5m2"):
+        assert n in names
+    assert rn.get_format("bf16") is BF16
+    assert rn.get_format(BF16) is BF16  # FloatFormats pass through
+    assert rn.native_format("sp") is FP32
+    assert rn.native_format("dp") is FP64
+    with pytest.raises(KeyError, match="fpgen"):
+        rn.get_format("e3m2")
+
+
+def test_registry_fpgen_points_resolve_by_name_everywhere():
+    f = rn.fpgen_format(3, 2)
+    assert f.name == "e3m2" and rn.get_format("e3m2") is f
+    # formats.get_format stays the low-level resolver for the builtins;
+    # the registry also answers for the same names
+    assert rn.REGISTRY.format("fp16").name == "fp16"
+    # rebinding a name to a different grid is refused
+    with pytest.raises(ValueError, match="refusing"):
+        rn.register_format(FloatFormat(4, 1, "e3m2"))
+
+
+def test_registry_scales_come_from_the_calibrated_model(params):
+    """FormatSpec scales must equal the energy_model hook (no drift), be
+    < 1 for sub-native formats, and shrink monotonically with width."""
+    spec = rn.REGISTRY.get("bf16")
+    hook = format_scale_factors(BF16, params=params)
+    assert spec.energy_scale == pytest.approx(hook["energy"])
+    assert spec.area_scale == pytest.approx(hook["area"])
+    assert spec.delay_scale == pytest.approx(hook["delay"])
+    ladder = [rn.REGISTRY.get(n) for n in ("fp32", "tf32", "bf16",
+                                           "fp8_e4m3")]
+    energies = [s.energy_scale for s in ladder]
+    assert energies[0] == pytest.approx(1.0)
+    assert all(a > b for a, b in zip(energies, energies[1:]))
+    assert all(0 < s.delay_scale <= 1.0 for s in ladder)
+
+
+def test_formats_for_orders_native_first():
+    sp = rn.REGISTRY.formats_for("sp")
+    assert sp[0] is FP32 and FP64 not in sp
+    dp = rn.REGISTRY.formats_for("dp")
+    assert dp[0] is FP64 and FP32 in dp  # narrow formats ride a dp datapath
+
+
+# ----------------------------------------------------- with_format plumbing
+def test_with_format_native_is_identity_and_narrowing_scales(params):
+    d = FABRICATED["sp_fma"]
+    assert d.with_format(FP32) is d  # bitwise-golden guarantee
+    nb = d.with_format(BF16)
+    assert nb.name == "sp_fma@bf16" and nb.sig_bits == 8
+    assert nb.precision == "sp" and nb.is_transprecision
+    wide = predict(d, params, vdd=0.9, vbb=1.2)
+    slim = predict(nb, params, vdd=0.9, vbb=1.2)
+    assert slim["e_op_pj"] < wide["e_op_pj"]
+    assert slim["area_mm2"] < wide["area_mm2"]
+    assert slim["freq_ghz"] > wide["freq_ghz"]  # shorter critical path
+    # narrowed variants are never silicon-anchored (name mismatch)
+    anch = predict(nb, params, vdd=0.9, vbb=1.2, anchored=True)
+    assert anch["freq_ghz"] == pytest.approx(slim["freq_ghz"])
+
+
+# ---------------------------------------------- import surface (satellite)
+def test_kernels_ops_and_models_numerics_are_adapters_only():
+    """Acceptance criterion: neither module carries emulation logic of its
+    own — both route through repro.numerics."""
+    import repro.kernels.ops as ops
+    import repro.models.numerics as mn
+    assert ops.emulated_matmul is rn.emulated_matmul
+    assert ops.matmul_for_policy is rn.matmul_for_policy
+    assert ops.quantize_tensor is rn.quantize_tensor
+    for mod in (ops, mn):
+        src = inspect.getsource(mod)
+        for token in ("fma_emu", "pallas", "softfloat", "lax.scan",
+                      "quantize(", "_ref.", "preferred_element_type"):
+            assert token not in src, (mod.__name__, token)
+    # the model-layer adapter delegates to the numerics facade
+    assert mn.matmul.__module__ == "repro.models.numerics"
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((4, 16)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((16, 4)), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(mn.matmul(x, w, None)),
+        np.asarray(rn.policy_matmul(x, w, None)))
+
+
+def test_emulated_dot_matches_softfloat_semantics():
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.standard_normal((3, 17)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((3, 17)), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(rn.emulated_dot(a, b, fmt="bf16", style="fused")),
+        np.asarray(rn.dot_fused(a, b, BF16)))
+    np.testing.assert_array_equal(
+        np.asarray(rn.emulated_dot(a, b, fmt=BF16, style="cascade")),
+        np.asarray(rn.dot_cascade(a, b, BF16, forwarding=False)))
+    np.testing.assert_array_equal(
+        np.asarray(rn.emulated_dot(a, b, fmt=BF16, style="cascade_fwd")),
+        np.asarray(rn.dot_cascade(a, b, BF16, forwarding=True)))
+    with pytest.raises(ValueError, match="style"):
+        rn.emulated_dot(a, b, fmt=BF16, style="sideways")
+
+
+def test_accum_style_mapping_is_canonical():
+    assert rn.accum_style_for("fma") == "fused"
+    assert rn.accum_style_for("cma", forwarding=True) == "cascade_fwd"
+    assert rn.accum_style_for("cma", forwarding=False) == "cascade"
+    assert chip.kernel_style_for(FABRICATED["sp_fma"]) == "fused"
+    assert chip.kernel_style_for(FABRICATED["sp_cma"]) == "cascade_fwd"
+
+
+# ------------------------------------------------------------ AccuracyModel
+def test_accuracy_oracle_matches_bit_exact_softfloat_dot():
+    """The Fraction step simulation must agree with the f64-based bit-exact
+    softfloat accumulation — two independent derivations of the same unit
+    semantics."""
+    from fractions import Fraction
+    rng = np.random.default_rng(5)
+    for style, fn in (("fused", lambda a, b, f: rn.dot_fused(a, b, f)),
+                      ("cascade", lambda a, b, f: rn.dot_cascade(
+                          a, b, f, forwarding=False)),
+                      ("cascade_fwd", lambda a, b, f: rn.dot_cascade(
+                          a, b, f, forwarding=True))):
+        for fmt in (BF16, FP8_E4M3):
+            raw = rng.standard_normal((2, 12))
+            a = [rn.rne_fraction(Fraction(float(x)), fmt) for x in raw[0]]
+            b = [rn.rne_fraction(Fraction(float(x)), fmt) for x in raw[1]]
+            want = float(fn(jnp.asarray([float(x) for x in a], jnp.float32),
+                            jnp.asarray([float(x) for x in b], jnp.float32),
+                            fmt))
+            got = float(rn.dot_exact_steps(a, b, fmt, style))
+            assert float(np.float32(got)) == want, (style, fmt.name)
+
+
+def test_accuracy_ladder_is_monotone():
+    errs = [ORACLE.rel_err(f, "fused") for f in ("fp64", "fp32", "fp16",
+                                                 "bf16", "fp8_e4m3")]
+    assert all(a < b for a, b in zip(errs, errs[1:]))
+    assert ORACLE.evaluate("bf16", "fused")["accuracy_bits"] > 5
+    # results are cached: same dict object back
+    assert ORACLE.evaluate("bf16", "fused") is ORACLE.evaluate("bf16",
+                                                               "fused")
+
+
+def test_accuracy_constraint_validates():
+    c = obj.accuracy_constraint(1e-3)
+    assert c.metric == obj.ACCURACY_METRIC and c.hi == 1e-3
+    with pytest.raises(ValueError):
+        obj.accuracy_constraint(0.0)
+
+
+# ----------------------------------------------- accuracy-constrained tuning
+def test_autotune_loose_slo_downshifts_tight_slo_refuses(params, cache,
+                                                         designs):
+    """Acceptance criterion: a loose-SLO throughput tune picks a sub-SP
+    format with a GFLOPS/W win; a tight SLO keeps FP32 at the exact
+    format-agnostic optimum."""
+    base = at.autotune(at.GEMM_STREAM, designs=designs, params=params,
+                       vdd_grid=VDD, vbb_grid=VBB, cache=cache)
+    loose = at.autotune(at.GEMM_STREAM, designs=designs, params=params,
+                        vdd_grid=VDD, vbb_grid=VBB, cache=cache,
+                        formats=TIERS, accuracy_slo=5e-2,
+                        accuracy_model=ORACLE)
+    tight = at.autotune(at.GEMM_STREAM, designs=designs, params=params,
+                        vdd_grid=VDD, vbb_grid=VBB, cache=cache,
+                        formats=TIERS, accuracy_slo=1e-7,
+                        accuracy_model=ORACLE)
+    assert base.fmt is None and base.format is FP32
+    assert loose.fmt.bits < 32  # downshifted
+    assert loose.metrics["rel_err"] <= 5e-2
+    assert loose.metrics["gflops_per_w"] > 1.5 * base.metrics["gflops_per_w"]
+    assert loose.metrics["e_eff_pj"] < base.metrics["e_eff_pj"]
+    # tight SLO: only fp32 qualifies, and the optimum is the format-
+    # agnostic one bit for bit
+    assert tight.fmt is FP32
+    assert (tight.design.name, tight.vdd, tight.vbb) == \
+        (base.design.name, base.vdd, base.vbb)
+    for k, v in base.metrics.items():
+        assert tight.metrics[k] == v, k
+
+
+def test_autotune_format_search_without_slo_is_unconstrained(params, cache,
+                                                             designs):
+    """formats= without an SLO searches the ladder unconstrained: the
+    narrowest candidate wins on energy."""
+    r = at.autotune(at.GEMM_STREAM, designs=designs, params=params,
+                    vdd_grid=VDD, vbb_grid=VBB, cache=cache,
+                    formats=TIERS, accuracy_model=ORACLE)
+    assert r.fmt is FP8_E4M3
+    assert "fmt" in r.as_dict() and r.as_dict()["fmt"] == "fp8_e4m3"
+
+
+def test_autotune_infeasible_slo_raises(params, cache, designs):
+    with pytest.raises(ValueError, match="no feasible"):
+        at.autotune(at.GEMM_STREAM, designs=designs, params=params,
+                    vdd_grid=VDD, vbb_grid=VBB, cache=cache,
+                    formats=(FP8_E4M3,), accuracy_slo=1e-12,
+                    accuracy_model=ORACLE)
+
+
+# --------------------------------------------------- tune_chip golden + SLO
+def test_tune_chip_unconstrained_is_golden_identical_to_pr3(params, cache,
+                                                            designs):
+    """Satellite acceptance: with no accuracy SLO anywhere, tune_chip's
+    SP and DP outputs equal the PR 3 tuner's exactly (the new format
+    machinery must be a strict no-op on the legacy path)."""
+    dp_designs = tuple(enumerate_structures("dp"))
+    phases = [chip.PhaseSpec("train", at.GEMM_STREAM, designs=designs,
+                             flops_fraction=0.6),
+              chip.PhaseSpec("decode", at.DEPENDENT_CHAIN,
+                             designs=dp_designs, precision="dp",
+                             flops_fraction=0.4)]
+    r = chip.tune_chip(phases, params=params, vdd_grid=VDD, vbb_grid=VBB,
+                       cache=cache)
+    want_sp = at.autotune(at.GEMM_STREAM, designs=designs, params=params,
+                          vdd_grid=VDD, vbb_grid=VBB, cache=cache)
+    want_dp = at.autotune(at.DEPENDENT_CHAIN, precision="dp",
+                          designs=dp_designs, params=params,
+                          vdd_grid=VDD, vbb_grid=VBB, cache=cache)
+    for unit, want in zip(r.spec.units, (want_sp, want_dp)):
+        assert (unit.design.name, unit.vdd, unit.vbb) == \
+            (want.design.name, want.vdd, want.vbb)
+        assert unit.fmt is None
+        for k, v in want.metrics.items():
+            assert unit.metrics[k] == v, k
+        assert "fmt" not in unit.as_dict()
+        assert obj.ACCURACY_METRIC not in unit.metrics
+
+
+def test_tune_chip_per_phase_slo_mixes_formats(params, cache, designs):
+    phases = [
+        chip.PhaseSpec("train", at.GEMM_STREAM, designs=designs,
+                       flops_fraction=0.7, accuracy_slo=5e-2,
+                       formats=TIERS),
+        chip.PhaseSpec("decode", at.DEPENDENT_CHAIN, designs=designs,
+                       flops_fraction=0.3, accuracy_slo=1e-7,
+                       formats=TIERS),
+    ]
+    r = chip.tune_chip(phases, params=params, vdd_grid=VDD, vbb_grid=VBB,
+                       cache=cache, accuracy_model=ORACLE, name="slo_mix")
+    train, decode = r.spec.units
+    assert train.fmt is not None and train.fmt.bits < 32
+    assert decode.fmt is FP32
+    rows = r.report["units"]
+    assert rows[0]["fmt"] == train.fmt.name
+    assert rows[0]["accuracy_slo"] == 5e-2
+    assert rows[0]["rel_err"] <= 5e-2
+    import json
+    json.dumps(r.report)  # stays serializable with the new fields
+
+
+# ------------------------------------------------- accuracy-class admission
+from helpers import make_chip_unit as _unit  # noqa: E402
+
+
+def test_chip_policy_routes_by_accuracy_class():
+    eco = _unit("decode_eco", FP8_E4M3, 1e-2, 0.5)
+    gold = _unit("decode_gold", FP32, 1e-8, 4.0)
+    pol = chip.ChipPolicy(chip.ChipSpec("tiered", (eco, gold)))
+    # loose SLO: both feasible, the cheap fleet wins the class objective
+    assert pol.admission_unit(accuracy_slo=5e-2).name == "decode_eco"
+    # tight SLO: only the wide format qualifies
+    assert pol.admission_unit(accuracy_slo=1e-7).name == "decode_gold"
+    # impossible SLO: degrade to the most accurate unit, don't reject
+    assert pol.admission_unit(accuracy_slo=1e-30).name == "decode_gold"
+    fleets = pol.slot_fleets(6, accuracy_slos=(5e-2, 1e-7))
+    assert set(fleets) == {"decode_eco", "decode_gold"}
+    assert sum(len(v) for v in fleets.values()) == 6
+    # unit-level accuracy introspection prefers the recorded metric
+    assert eco.rel_err() == 1e-2
+    assert eco.operand_format is FP8_E4M3
+    assert gold.operand_format is FP32
+
+
+def test_narrow_fpgen_points_are_scored_not_crashed(params, cache):
+    """A registered FPGen point too narrow for the oracle workload (fp4:
+    3-sigma draws overflow max_finite=3.0, man_bits=0 formats have a 1-bit
+    significand) must be scored infeasible / swept, never abort the tune."""
+    fp4 = FloatFormat(2, 1)
+    m = rn.AccuracyModel(k=16, n_samples=4)
+    e = m.evaluate(fp4, "fused")
+    assert e["overflow_frac"] > 0 and e["rel_err_rms"] == math.inf
+    # man_bits=0: a power-of-two-only grid still hosts a (degenerate)
+    # datapath and a finite error score
+    e5m0 = FloatFormat(5, 0)
+    d = FABRICATED["sp_fma"].with_format(e5m0)
+    assert d.sig_bits == 1
+    assert math.isfinite(m.rel_err(e5m0, "fused"))
+    # an infeasible-format candidate simply never wins under an SLO
+    designs = tuple(enumerate_structures("sp"))[:8]
+    r = at.autotune(at.GEMM_STREAM, designs=designs, params=params,
+                    vdd_grid=VDD, vbb_grid=VBB, cache=cache,
+                    formats=(FP32, fp4), accuracy_slo=1e-2,
+                    accuracy_model=m)
+    assert r.fmt is FP32
+
+
+def test_route_cache_is_bounded():
+    eco = _unit("decode_eco", FP8_E4M3, 1e-2, 0.5)
+    gold = _unit("decode_gold", FP32, 1e-8, 4.0)
+    pol = chip.ChipPolicy(chip.ChipSpec("tiered", (eco, gold)))
+    for i in range(5000):  # arbitrary per-request SLO floats
+        pol.admission_unit(accuracy_slo=1e-8 * (1 + i))
+    assert len(pol._route) <= 4096

@@ -267,3 +267,119 @@ def test_admission_routing_by_deadline_class(dense):
     assert bulk.routed_unit == "sp_fma"
     assert interactive.unit_energy_j["sp_cma"] > 0
     assert bulk.unit_energy_j["sp_fma"] > 0
+
+
+def test_stop_tokens_bitwise_parity_with_greedy(dense):
+    """Satellite acceptance: EOS-class stop tokens freeze lanes inside the
+    fused scan — per-request outputs must equal greedy_decode with the same
+    stop set token for token, across dispatch-boundary positions."""
+    cfg, model, params = dense
+    prompts = _prompts(cfg, (3, 8, 9, 15))
+    plain = [greedy_decode(model, params, p, 12, max_len=64)
+             for p in prompts]
+    # stop ids that actually occur mid-stream (one early, one late) so the
+    # stop lands both inside a dispatch and at a dispatch boundary
+    stops = (plain[0][3], plain[2][1])
+    refs = [greedy_decode(model, params, p, 12, max_len=64,
+                          stop_tokens=stops) for p in prompts]
+    assert any(len(r) < 12 for r in refs)  # the stops really fire
+    server = BatchedServer(model, params, slots=2, max_len=64,
+                           dispatch_tokens=4, stop_tokens=stops)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=12)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        server.submit(r)
+    finished = server.run(max_steps=100)
+    assert sorted(r.uid for r in finished) == [0, 1, 2, 3]
+    for r, ref in zip(reqs, refs):
+        assert r.output == ref, (r.uid, r.output, ref)
+        assert r.done and not r.expired
+
+
+def test_stop_token_on_first_prefill_token(dense):
+    """A prompt whose very first sampled token is a stop id finishes at
+    admission without ever occupying a decode slot — and its device lane
+    is freed too: later dispatches (driven here by a concurrent request)
+    must not decode zombie tokens for the recycled slot."""
+    cfg, model, params = dense
+    p, other = _prompts(cfg, (6, 9))
+    first = greedy_decode(model, params, p, 1, max_len=32)[0]
+    other_ref = greedy_decode(model, params, other, 6, max_len=32)
+    server = BatchedServer(model, params, slots=2, max_len=32,
+                           dispatch_tokens=2, stop_tokens=(first,))
+    req = Request(uid=0, prompt=p, max_new_tokens=8)
+    longer = Request(uid=1, prompt=other, max_new_tokens=6)
+    server.submit(req)
+    server.submit(longer)
+    server.run(max_steps=20)
+    assert req.done and req.output == [first]
+    assert longer.output == other_ref
+    assert server._active == [None, None]
+    # the EOS'd lane was deactivated on device at admission: every decoded
+    # token is accounted to a live request, none to the zombie slot
+    assert not bool(np.asarray(server._active_mask).any())
+    assert server.tokens_decoded == len(req.output) + len(longer.output)
+
+
+def test_admission_routing_by_accuracy_class(dense):
+    """Requests carrying an accuracy SLO land on the cheapest fleet whose
+    unit format meets it: loose-SLO traffic on the sub-SP (fp8) unit,
+    tight-SLO traffic on the FP32 unit."""
+    from helpers import make_chip_unit as unit
+    from repro.core.formats import FP32, FP8_E4M3
+    cfg, model, params = dense
+
+    spec = chip.ChipSpec("tiered", (unit("decode_eco", FP8_E4M3, 1e-2, 0.5),
+                                    unit("decode_gold", FP32, 1e-8, 4.0)))
+    policy = chip.ChipPolicy(spec, calibrate())
+    server = BatchedServer(model, params, slots=4, max_len=32,
+                           chip_policy=policy,
+                           accuracy_fleets=(5e-2, 1e-7))
+    assert sorted(server._fleets) == ["decode_eco", "decode_gold"]
+    prompts = _prompts(cfg, (4, 5, 6))
+    loose = Request(uid=0, prompt=prompts[0], max_new_tokens=3,
+                    accuracy_slo=5e-2)
+    tight = Request(uid=1, prompt=prompts[1], max_new_tokens=3,
+                    accuracy_slo=1e-7)
+    dont_care = Request(uid=2, prompt=prompts[2], max_new_tokens=3)
+    for r in (loose, tight, dont_care):
+        server.submit(r)
+    server.run(max_steps=30)
+    assert loose.routed_unit == "decode_eco"
+    assert tight.routed_unit == "decode_gold"
+    assert dont_care.routed_unit == "decode_eco"  # class objective winner
+    assert loose.unit_energy_j["decode_eco"] > 0
+    assert tight.unit_energy_j["decode_gold"] > 0
+    # the loose fleet's pJ/FLOP is the cheap one: same token count, less J
+    assert loose.energy_j < tight.energy_j
+
+
+def test_accuracy_fallback_picks_most_accurate_provisioned_fleet(dense):
+    """When the chip routes an accuracy-tagged request to a unit no fleet
+    was provisioned for, admission re-resolves against the provisioned
+    units — most accurate available, never an arbitrary fleet."""
+    from helpers import make_chip_unit as unit
+    from repro.core.formats import BF16, FP32, FP8_E4M3
+    cfg, model, params = dense
+    spec = chip.ChipSpec("tri", (unit("decode_eco", FP8_E4M3, 1e-2, 0.5),
+                                 unit("decode_mid", BF16, 1e-3, 1.0),
+                                 unit("decode_gold", FP32, 1e-8, 4.0)))
+    policy = chip.ChipPolicy(spec, calibrate())
+    # fleets provisioned only for the loose classes: eco + mid
+    server = BatchedServer(model, params, slots=4, max_len=32,
+                           chip_policy=policy,
+                           accuracy_fleets=(5e-2, 5e-3))
+    assert sorted(server._fleets) == ["decode_eco", "decode_mid"]
+    # tight request: the chip would route decode_gold (unprovisioned) —
+    # admission must degrade to the most accurate *provisioned* fleet
+    # (mid), not silently land on the fp8 fleet
+    tight = Request(uid=0, prompt=_prompts(cfg, (4,))[0], max_new_tokens=3,
+                    accuracy_slo=1e-7)
+    # a mid-class request takes the cheapest fleet meeting its SLO
+    mid = Request(uid=1, prompt=_prompts(cfg, (5,))[0], max_new_tokens=3,
+                  accuracy_slo=5e-3)
+    server.submit(tight)
+    server.submit(mid)
+    server.run(max_steps=20)
+    assert tight.routed_unit == "decode_mid"
+    assert mid.routed_unit == "decode_mid"

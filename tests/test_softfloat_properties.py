@@ -20,9 +20,14 @@ from hypothesis import given, settings, strategies as st
 import jax
 
 from repro.core import softfloat as sf
-from repro.core.formats import BF16, FP16, TF32, FloatFormat
+from repro.core.formats import BF16, FloatFormat
+from repro.numerics import REGISTRY
 
-FMTS = [BF16, FP16, TF32]
+# The whole sub-f32 transprecision ladder of the registry (satellite: the
+# fp8 tiers join the suite) — every format the tuner can downshift to is
+# property-tested against the exact rational oracle.
+FMTS = [REGISTRY.format(n) for n in ("bf16", "fp16", "tf32",
+                                     "fp8_e4m3", "fp8_e5m2")]
 
 
 # ---------------------------------------------------------------------------
