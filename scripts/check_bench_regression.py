@@ -34,6 +34,10 @@ SPEEDUP_KEYS = {
     "chip_bench.json": "speedup_warm",      # cold chip tune / warm chip tune
     "serve_bench.json": "speedup_warm",     # seed per-token / fused decode
     "numerics_bench.json": "speedup_warm",  # cold / warm accuracy-SLO tune
+    # chaos harness: fraction of requests completed under injected faults
+    # (the bench hard-asserts zero loss before appending; this guards the
+    # committed trajectory against a silently-relaxed future edit)
+    "resilience_bench.json": "completed_frac",
 }
 
 

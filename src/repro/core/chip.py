@@ -323,6 +323,52 @@ def partition_slots(n_slots: int, units: Sequence[ChipUnit]
 
 
 # ---------------------------------------------------------------------------
+# Unit health (the serving resilience layer's view of the die)
+# ---------------------------------------------------------------------------
+#: leakage share assumed when a unit's metric row carries no ``p_leak_mw``
+#: (synthetic test units) — the paper's near-threshold regime where leakage
+#: is a large minority of total power
+_LEAK_SHARE_FALLBACK = 0.3
+
+
+@dataclasses.dataclass(frozen=True)
+class UnitHealth:
+    """Runtime health of one ``ChipUnit`` (units themselves are frozen
+    design-time objects; health is ``ChipPolicy`` state).
+
+    ``status``: ``'healthy'`` | ``'throttled'`` (freq derated by
+    ``freq_scale``, energy repriced) | ``'quarantined'`` (numerics
+    corruption detected: not routable, may recover) | ``'dead'`` (unit
+    lost: not routable).  ``since_s`` is the serving-clock time the state
+    was entered (recovery-latency bookkeeping).
+    """
+
+    HEALTHY = "healthy"
+    THROTTLED = "throttled"
+    QUARANTINED = "quarantined"
+    DEAD = "dead"
+    STATUSES = (HEALTHY, THROTTLED, QUARANTINED, DEAD)
+
+    status: str = HEALTHY
+    freq_scale: float = 1.0  # effective frequency / nominal (throttle derate)
+    reason: str = ""
+    since_s: float = 0.0
+
+    def __post_init__(self):
+        if self.status not in self.STATUSES:
+            raise ValueError(f"unknown health status {self.status!r}; "
+                             f"have {self.STATUSES}")
+        if not 0.0 < self.freq_scale <= 1.0:
+            raise ValueError(f"freq_scale must be in (0, 1], "
+                             f"got {self.freq_scale}")
+
+    @property
+    def in_service(self) -> bool:
+        """Routable: healthy or throttled (degraded, still serving)."""
+        return self.status in (self.HEALTHY, self.THROTTLED)
+
+
+# ---------------------------------------------------------------------------
 # The facade
 # ---------------------------------------------------------------------------
 #: objective used to break routing ties per workload class (PR 2 API)
@@ -341,16 +387,116 @@ class ChipPolicy:
     """
 
     def __init__(self, spec: ChipSpec, params: Optional[TechParams] = None):
-        self.spec = spec
+        self._spec = spec
         self._params = params
         self._route: Dict[Tuple[str, Optional[str], Optional[float]],
                           ChipUnit] = {}
+        self._health: Dict[str, UnitHealth] = {}
+        #: bumped on every health / membership change — consumers holding
+        #: derived routing state (the serving engine's fleet plan) compare
+        #: against it instead of re-deriving per request
+        self.health_version = 0
 
     @property
     def params(self) -> TechParams:
         if self._params is None:
             self._params = calibrate()
         return self._params
+
+    @property
+    def spec(self) -> ChipSpec:
+        return self._spec
+
+    @spec.setter
+    def spec(self, new_spec: ChipSpec) -> None:
+        """Fleet membership change: the bounded route cache MUST go with it
+        (a stale entry would route to a unit no longer on the die)."""
+        self._spec = new_spec
+        names = {u.name for u in new_spec.units}
+        self._health = {k: v for k, v in self._health.items() if k in names}
+        self._invalidate_routes()
+
+    def replace_spec(self, new_spec: ChipSpec) -> None:
+        self.spec = new_spec
+
+    def _invalidate_routes(self) -> None:
+        self._route.clear()
+        self.health_version += 1
+
+    # -- health ------------------------------------------------------------
+    def unit_health(self, name: str) -> UnitHealth:
+        self.spec.unit(name)  # raises on unknown unit
+        return self._health.get(name, UnitHealth())
+
+    def set_health(self, name: str, status: str, *, freq_scale: float = 1.0,
+                   reason: str = "", now: float = 0.0) -> UnitHealth:
+        """Mark a unit's runtime health (the ``HealthMonitor`` writes here).
+        Any change invalidates the bounded route cache — a stale entry
+        would keep routing traffic to a dead unit."""
+        self.spec.unit(name)  # raises on unknown unit
+        h = UnitHealth(status=status, freq_scale=freq_scale, reason=reason,
+                       since_s=now)
+        prev = self._health.get(name)
+        self._health[name] = h
+        if prev is None or prev.status != h.status \
+                or prev.freq_scale != h.freq_scale:
+            self._invalidate_routes()
+        return h
+
+    def clear_health(self, name: Optional[str] = None) -> None:
+        """Restore a unit (or all units) to healthy."""
+        if name is None:
+            changed = bool(self._health)
+            self._health.clear()
+        else:
+            changed = self._health.pop(name, None) is not None
+        if changed:
+            self._invalidate_routes()
+
+    def in_service(self, name: str) -> bool:
+        return self.unit_health(name).in_service
+
+    def in_service_units(self) -> Tuple[ChipUnit, ...]:
+        return tuple(u for u in self.spec.units if self.in_service(u.name))
+
+    def unit_time_scale(self, name: str) -> float:
+        """Dispatch-time inflation of a unit: 1/freq_scale while throttled,
+        inf when not in service (nothing completes on it)."""
+        h = self.unit_health(name)
+        if not h.in_service:
+            return math.inf
+        return 1.0 / h.freq_scale
+
+    def unit_energy_scale(self, name: str) -> float:
+        """Energy-per-FLOP repricing of a unit under its current health.
+
+        A thermal/electrical throttle lowers frequency at (to first order)
+        unchanged voltage: dynamic energy per op is constant, but leakage
+        *power* is constant too, so leakage energy per op grows as
+        1/freq_scale.  scale = dyn_share + leak_share / freq_scale, with
+        the shares read off the unit's tuned metric row."""
+        h = self.unit_health(name)
+        if h.freq_scale >= 1.0:
+            return 1.0
+        m = self.spec.unit(name).metrics
+        if "p_leak_mw" in m and float(m.get("p_total_mw", 0.0)) > 0.0:
+            leak = float(m["p_leak_mw"]) / float(m["p_total_mw"])
+        else:
+            leak = _LEAK_SHARE_FALLBACK
+        return (1.0 - leak) + leak / h.freq_scale
+
+    def unit_energy_j(self, unit: ChipUnit, flops: float) -> float:
+        """Joules for ``flops`` on ``unit`` at its *current* health (the
+        health-aware form of ``ChipUnit.energy_j``)."""
+        return unit.energy_j(flops) * self.unit_energy_scale(unit.name)
+
+    def health_report(self) -> Dict[str, Dict[str, object]]:
+        return {u.name: dict(status=self.unit_health(u.name).status,
+                             freq_scale=self.unit_health(u.name).freq_scale,
+                             reason=self.unit_health(u.name).reason,
+                             in_service=self.in_service(u.name),
+                             energy_scale=self.unit_energy_scale(u.name))
+                for u in self.spec.units}
 
     # -- routing -----------------------------------------------------------
     def _unit_class(self, u: ChipUnit) -> str:
@@ -368,14 +514,29 @@ class ChipPolicy:
         accuracy-class analogue of the precision filter.  When no unit on
         the die meets the SLO the most accurate one is routed (serving
         degrades to best-effort accuracy rather than rejecting traffic).
+
+        Routing is **health-aware**: units not in service (dead /
+        quarantined) never route; throttled units only route when no
+        healthy unit survives the precision/accuracy filters (degrade,
+        don't drop).  With every unit out of service there is nothing to
+        degrade to — ``repro.faults.UnitFault`` is raised.
         """
         key = (phase, precision, accuracy_slo)
         hit = self._route.get(key)
         if hit is not None:
             return hit
-        pool = [u for u in self.spec.units
+        alive = [u for u in self.spec.units if self.in_service(u.name)]
+        if not alive:
+            from repro.faults import UnitFault
+            raise UnitFault(
+                f"chip {self.spec.name!r}: no unit in service "
+                f"(health: { {u.name: self.unit_health(u.name).status for u in self.spec.units} })")
+        pool = [u for u in alive
                 if precision is None or u.design.precision == precision]
-        pool = pool or list(self.spec.units)
+        pool = pool or alive
+        healthy = [u for u in pool
+                   if self.unit_health(u.name).status == UnitHealth.HEALTHY]
+        pool = healthy or pool
         if accuracy_slo is not None:
             ok = [u for u in pool if u.rel_err() <= accuracy_slo]
             pool = ok or [min(pool, key=lambda u: u.rel_err())]

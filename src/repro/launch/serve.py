@@ -3,6 +3,12 @@ architecture (reduced config on CPU).
 
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
       --requests 8 --slots 4
+
+With ``--chaos`` the launcher runs the fault-tolerant engine over a
+tiered two-fleet die and injects one seeded fault mid-run, printing the
+resilience report (see docs/resilience.md):
+
+  PYTHONPATH=src python -m repro.launch.serve --chaos kill
 """
 import argparse
 
@@ -23,6 +29,15 @@ def main():
                     help="tag every request with this accuracy class "
                          "(normwise rel_err ceiling; needs a chip policy "
                          "with accuracy-tiered units to change routing)")
+    ap.add_argument("--chaos", choices=("kill", "throttle", "corrupt"),
+                    default=None,
+                    help="run the resilient engine on a tiered die and "
+                         "inject this seeded fault on the cheap fleet "
+                         "mid-run (degrade-don't-drop demo)")
+    ap.add_argument("--chaos-at", type=float, default=0.15,
+                    help="fault onset, simulated seconds")
+    ap.add_argument("--chaos-seed", type=int, default=7,
+                    help="FaultInjector RNG seed")
     args = ap.parse_args()
 
     import jax
@@ -38,6 +53,11 @@ def main():
     model = LM(cfg)
     params = model.init(jax.random.key(0))
     stops = () if args.stop_token is None else (args.stop_token,)
+
+    if args.chaos is not None:
+        _run_chaos(args, cfg, model, params, stops)
+        return
+
     server = BatchedServer(model, params, slots=args.slots,
                            max_len=args.max_len,
                            dispatch_tokens=args.dispatch_tokens,
@@ -56,6 +76,72 @@ def main():
     print(f"{len(finished)}/{len(reqs)} requests completed, {toks} tokens, "
           f"{server.dispatches} fused dispatches, "
           f"{server.host_syncs} host syncs")
+
+
+def _run_chaos(args, cfg, model, params, stops):
+    """Fault-injection demo: a tiered fp8/fp32 die, one seeded fault on
+    the cheap fleet mid-run, every request still completes."""
+    import numpy as np
+
+    from repro.core import chip
+    from repro.core.energy_model import calibrate
+    from repro.core.formats import FP32, FP8_E4M3
+    from repro.core.fpu_arch import FABRICATED
+    from repro.faults import FaultEvent, FaultInjector, FaultKind
+    from repro.serve.engine import Request
+    from repro.serve.resilience import ResilienceConfig, ResilientServer
+
+    tick = 0.05
+
+    def unit(name, fmt, rel_err, e_pj):
+        metrics = dict(freq_ghz=1.0, cycle_ns=1.0, p_total_mw=2e3 * e_pj,
+                       area_mm2=0.01, gflops_per_w=1.0 / (e_pj * 1e-3),
+                       gflops_per_mm2=200.0, e_eff_pj=e_pj, rel_err=rel_err,
+                       avg_latency_penalty=0.0)
+        return chip.ChipUnit(name, FABRICATED["sp_cma"], 0.8, 1.2,
+                             metrics=metrics, fmt=fmt)
+
+    spec = chip.ChipSpec("tiered", (unit("decode_eco", FP8_E4M3, 1e-2, 0.5),
+                                    unit("decode_gold", FP32, 1e-8, 4.0)))
+    policy = chip.ChipPolicy(spec, calibrate())
+    kind = {"kill": FaultKind.KILL, "throttle": FaultKind.THROTTLE,
+            "corrupt": FaultKind.CORRUPT}[args.chaos]
+    event = FaultEvent(at_s=args.chaos_at, unit="decode_eco", kind=kind,
+                       magnitude=0.4 if kind is FaultKind.THROTTLE else 1.0,
+                       duration_s=4 * tick if kind is FaultKind.CORRUPT
+                       else None)
+    clock_t = [0.0]
+    server = ResilientServer(
+        model, params, slots=args.slots, max_len=args.max_len,
+        chip_policy=policy, accuracy_fleets=(5e-2, 1e-7),
+        dispatch_tokens=args.dispatch_tokens, stop_tokens=stops,
+        clock=lambda: clock_t[0],
+        injector=FaultInjector((event,), seed=args.chaos_seed),
+        resilience=ResilienceConfig(synthetic_dispatch_s=tick,
+                                    probe_interval_s=1.0))
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        3 + i % 6).astype(np.int32),
+                    max_new_tokens=args.new_tokens,
+                    accuracy_slo=args.accuracy_slo or 5e-2)
+            for i in range(args.requests)]
+    for r in reqs:
+        server.submit(r)
+    for _ in range(2000):
+        clock_t[0] += tick
+        server.step()
+        if server.idle():
+            break
+    rep = server.resilience_report()
+    done = sum(1 for r in reqs if r.done and not r.expired)
+    print(f"chaos={args.chaos}: {done}/{len(reqs)} requests completed, "
+          f"{sum(1 for r in reqs if r.requeues)} migrated, "
+          f"faults_logged={len(rep['fault_log'])}, "
+          f"recovery_s={rep['recovery_latency_s']['max']:.3f}, "
+          f"wasted_j={server.wasted_energy_j:.3e}")
+    for name, h in sorted(rep["health"].items()):
+        print(f"  {name}: {h['status']} energy_scale={h['energy_scale']:.2f}")
 
 
 if __name__ == "__main__":

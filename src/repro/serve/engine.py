@@ -67,6 +67,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.faults import UnitFault
 from repro.models import LM, DecodeCache
 
 
@@ -85,9 +86,29 @@ class Request:
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     expired: bool = False
+    #: structurally rejected (validation / backpressure / load shedding):
+    #: never admitted, reason in ``reject_reason``
+    rejected: bool = False
+    reject_reason: str = ""
     routed_unit: str = ""  # chip unit serving this request's decode phase
+    #: times this request was drained off a failing fleet and re-admitted
+    #: as a continuation (prefill + decode-path replay) on a surviving one
+    requeues: int = 0
     energy_j: float = 0.0  # total (partial if expired)
     unit_energy_j: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+class RequestRejected(ValueError):
+    """Structured admission reject: ``submit()`` raises it *and* records
+    the reject on the request (``rejected`` / ``reject_reason``) and in
+    ``server.rejected`` — callers get an actionable error instead of a
+    deep routing failure, telemetry gets a structured record."""
+
+    def __init__(self, req: "Request", code: str, reason: str):
+        super().__init__(f"request {req.uid}: [{code}] {reason}")
+        self.req = req
+        self.code = code
+        self.reason = reason
 
 
 def bucket_length(n: int, *, lo: int = 8) -> int:
@@ -233,7 +254,19 @@ class BatchedServer:
         # total tokens the slot's request will get (1 + its device budget;
         # below max_new_tokens when the cache capacity capped it)
         self._slot_quota = [0] * slots
+        # committed tokens a re-admitted continuation still has to replay
+        # through the decode path before commits resume (see _admit_batch)
+        self._slot_replay = [0] * slots
         self.finished: List[Request] = []
+        #: structurally rejected requests (validation / backpressure /
+        #: shedding) — never admitted, never in ``finished``
+        self.rejected: List[Request] = []
+        #: fleets taken out of service (unit killed / quarantined) — the
+        #: resilience layer drains them; admission never routes to them
+        self._out_of_service: set = set()
+        #: drained requests with no fleet in service to re-route to —
+        #: parked (never dropped) until capacity returns
+        self._parked: List[Request] = []
         if chip_policy is None:
             self._fleets: Dict[str, Tuple[int, ...]] = {
                 "": tuple(range(slots))}
@@ -249,10 +282,12 @@ class BatchedServer:
 
     # ------------------------------------------------------- chip telemetry
     def _charge_unit(self, req: Request, unit, flops: float) -> None:
-        """Account ``flops`` on ``unit`` (bulk form, dispatch-boundary)."""
+        """Account ``flops`` on ``unit`` (bulk form, dispatch-boundary),
+        at the unit's *current* health pricing (a throttled unit's leakage
+        energy per FLOP grows with the derate)."""
         if self.chip_policy is None or not flops or unit is None:
             return
-        e_j = unit.energy_j(flops)
+        e_j = self.chip_policy.unit_energy_j(unit, flops)
         req.energy_j += e_j
         req.unit_energy_j[unit.name] = \
             req.unit_energy_j.get(unit.name, 0.0) + e_j
@@ -282,8 +317,23 @@ class BatchedServer:
         return {name or "(default)": dict(
             unit=name or None, slots=list(ids),
             queued=len(self._queues[name]),
+            in_service=self._fleet_in_service(name),
             active=sum(1 for s in ids if self._active[s] is not None))
             for name, ids in self._fleets.items()}
+
+    def _fleet_in_service(self, name: str) -> bool:
+        """A fleet is routable when the engine hasn't taken it out of
+        service AND the chip's health model still lists its unit as
+        serving (dead/quarantined units never take new admissions)."""
+        if name in self._out_of_service:
+            return False
+        if self.chip_policy is not None and name in self._fleet_units \
+                and self._fleet_units[name] is not None:
+            return self.chip_policy.in_service(name)
+        return True
+
+    def _serving_fleets(self) -> List[str]:
+        return [n for n in self._fleets if self._fleet_in_service(n)]
 
     def _route(self, req: Request) -> str:
         """Admission routing: which fleet serves this request's decode."""
@@ -293,39 +343,120 @@ class BatchedServer:
         if self._deadline_routing:
             deadline_class = ("interactive" if req.deadline_s is not None
                              else "bulk")
-        unit = self.chip_policy.admission_unit(
-            precision=req.precision or self._precision,
-            deadline_class=deadline_class,
-            accuracy_slo=req.accuracy_slo)
-        if unit.name not in self._fleets:
-            # the chip routed a unit no fleet was provisioned for.  For
-            # accuracy-tagged traffic, re-resolve against the *provisioned*
-            # units: cheapest fleet meeting the SLO, else the most accurate
-            # one (degrade, never silently violate harder than necessary).
-            # The requested precision stays a hard pre-filter (as in
-            # unit_for_phase) whenever any same-precision fleet exists.
+        try:
+            unit = self.chip_policy.admission_unit(
+                precision=req.precision or self._precision,
+                deadline_class=deadline_class,
+                accuracy_slo=req.accuracy_slo)
+        except Exception:  # every unit out of service: degrade below
+            unit = None
+        if unit is not None and unit.name in self._fleets \
+                and self._fleet_in_service(unit.name):
+            return unit.name
+        return self._degrade_route(req)
+
+    def _degrade_route(self, req: Request) -> str:
+        """Degrade-don't-drop re-resolution against the *provisioned,
+        in-service* fleets — used when the chip routed a unit no fleet was
+        provisioned for, or the preferred fleet is out of service.
+
+        Candidate order: same-precision fleets when any survive (soft
+        pre-filter, as in ``unit_for_phase``); then the cheapest fleet
+        whose unit meets the request's accuracy requirement — the explicit
+        ``accuracy_slo``, else the native error of its requested precision
+        (falling back to a *more accurate* unit is always legal); else the
+        most accurate survivor (never silently degrade harder than
+        necessary).  With no fleet in service at all there is nothing to
+        degrade to: ``repro.faults.UnitFault``."""
+        units = [(n, u) for n, u in self._fleet_units.items()
+                 if u is not None and self._fleet_in_service(n)]
+        if not units:
+            alive = self._serving_fleets()
+            if alive:  # fleets without chip units (no-policy engines)
+                return alive[0]
+            from repro.faults import UnitFault
+            raise UnitFault(
+                f"request {req.uid}: no serving fleet in service "
+                f"(out of service: {sorted(self._out_of_service)})")
+        want_p = req.precision or self._precision
+        if want_p is not None:
+            same_p = [(n, u) for n, u in units
+                      if u.design.precision == want_p]
+            units = same_p or units
+        ceiling = req.accuracy_slo
+        if ceiling is None and req.precision is not None:
+            # falling back across precisions: a surviving unit at least as
+            # accurate as the requested precision's native format is legal
+            try:
+                from repro.numerics import (DEFAULT_ACCURACY_MODEL,
+                                            native_format)
+                ceiling = DEFAULT_ACCURACY_MODEL.rel_err(
+                    native_format(req.precision), "fused")
+            except Exception:
+                ceiling = None
+        pol = self.chip_policy
+
+        def cost(nu):  # health-repriced pJ/FLOP: throttled fleets cost more
+            return nu[1].e_per_flop_pj * pol.unit_energy_scale(nu[0])
+
+        if ceiling is not None:
+            ok = [(n, u) for n, u in units if u.rel_err() <= ceiling]
+            if ok:
+                return min(ok, key=cost)[0]
+            return min(units, key=lambda nu: nu[1].rel_err())[0]
+        return min(units, key=cost)[0]
+
+    # ---------------------------------------------------------- validation
+    def _reject(self, req: Request, code: str, reason: str):
+        req.rejected = True
+        req.reject_reason = f"[{code}] {reason}"
+        self.rejected.append(req)
+        raise RequestRejected(req, code, reason)
+
+    def validate(self, req: Request) -> None:
+        """Admission validation: actionable, structured errors instead of
+        deep routing/scatter failures.  Raises ``RequestRejected`` (and
+        records the reject) on the first violation."""
+        n = req.max_new_tokens
+        if not isinstance(n, (int, np.integer)) or n < 1:
+            self._reject(req, "bad_max_tokens",
+                         f"max_new_tokens must be a positive int, got {n!r}")
+        prompt = np.asarray(req.prompt)
+        if prompt.ndim != 1 or prompt.size == 0:
+            self._reject(req, "bad_prompt",
+                         f"prompt must be a non-empty 1-D int array, got "
+                         f"shape {prompt.shape}")
+        if not np.issubdtype(prompt.dtype, np.integer):
+            self._reject(req, "bad_prompt",
+                         f"prompt dtype must be integer, got {prompt.dtype}")
+        if self._len_cap is not None and len(prompt) > self._len_cap:
+            self._reject(req, "prompt_too_long",
+                         f"prompt length {len(prompt)} exceeds the engine "
+                         f"cache capacity {self._len_cap}")
+        if req.accuracy_slo is not None and req.accuracy_slo <= 0:
+            self._reject(req, "bad_accuracy_slo",
+                         f"accuracy_slo must be > 0, got {req.accuracy_slo}")
+        if self.chip_policy is not None:
+            die = self.chip_policy.spec.units
+            if req.precision is not None:
+                have = sorted({u.design.precision for u in die})
+                if req.precision not in have:
+                    self._reject(req, "unknown_precision",
+                                 f"precision {req.precision!r} is not "
+                                 f"fabricated on chip "
+                                 f"{self.chip_policy.spec.name!r} "
+                                 f"(have {have})")
             if req.accuracy_slo is not None:
-                units = [(n, u) for n, u in self._fleet_units.items()
-                         if u is not None]
-                want_p = req.precision or self._precision
-                if want_p is not None:
-                    same_p = [(n, u) for n, u in units
-                              if u.design.precision == want_p]
-                    units = same_p or units
-                ok = [(n, u) for n, u in units
-                      if u.rel_err() <= req.accuracy_slo]
-                if ok:
-                    return min(ok, key=lambda nu: nu[1].e_per_flop_pj)[0]
-                if units:
-                    return min(units, key=lambda nu: nu[1].rel_err())[0]
-            return next(iter(self._fleets))  # exotic precision: fall back
-        return unit.name
+                best = min(u.rel_err() for u in die)
+                if best > req.accuracy_slo:
+                    self._reject(
+                        req, "accuracy_slo_unmeetable",
+                        f"no unit on chip {self.chip_policy.spec.name!r} "
+                        f"meets accuracy_slo={req.accuracy_slo:g} (best "
+                        f"achievable rel_err={best:g})")
 
     def submit(self, req: Request):
-        if self._len_cap is not None and len(req.prompt) > self._len_cap:
-            raise ValueError(
-                f"request {req.uid}: prompt length {len(req.prompt)} "
-                f"exceeds the engine cache capacity {self._len_cap}")
+        self.validate(req)
         fleet = self._route(req)
         if self.chip_policy is not None:
             req.routed_unit = fleet
@@ -346,6 +477,76 @@ class BatchedServer:
         req.expired = True
         self._finish(req)
 
+    # ------------------------------------------------ drain / re-admission
+    def _release_slots(self, slots: List[int]) -> None:
+        """Free engine+device slot state without touching the requests."""
+        for s in slots:
+            self._active[s] = None
+            self._slot_replay[s] = 0
+        if slots:
+            self._active_mask = self._active_mask.at[
+                np.asarray(slots, np.int32)].set(False)
+
+    def requeue(self, req: Request) -> str:
+        """Re-admit an in-flight request as a continuation: re-routed
+        (health-aware) to a surviving fleet, queued at the *front* (drained
+        traffic outranks new arrivals).  On admission the new fleet
+        re-prefills the prompt and *replays* the committed tokens through
+        the decode path — the same computation that produced them, so the
+        stream resumes bitwise-identically (re-prefilling prompt+output
+        instead would cross from the decode path to the prefill path,
+        whose numerics are not bitwise-equal).  With *no* fleet in service
+        the request is parked (never dropped): the next admission with
+        restored capacity re-routes it.  Returns the new fleet ('' when
+        parked)."""
+        req.requeues += 1
+        try:
+            fleet = self._route(req)
+        except UnitFault:
+            self._parked.append(req)
+            return ""
+        if self.chip_policy is not None:
+            req.routed_unit = fleet
+        self._queues[fleet].insert(0, req)
+        return fleet
+
+    def set_fleet_in_service(self, name: str, in_service: bool) -> None:
+        if name not in self._fleets:
+            raise KeyError(f"no fleet {name!r}; have {sorted(self._fleets)}")
+        if in_service:
+            self._out_of_service.discard(name)
+        else:
+            self._out_of_service.add(name)
+
+    def drain_fleet(self, name: str, *, requeue: bool = True
+                    ) -> List[Request]:
+        """Take a fleet out of service and drain it: in-flight requests on
+        its slots are released (device lanes deactivated, partial energy
+        kept) and — with ``requeue=True`` — re-admitted as continuations on
+        the cheapest surviving fleet that still meets their
+        precision/accuracy class; its queued requests are re-routed the
+        same way.  ``requeue=False`` force-drains: affected requests are
+        finished as expired with whatever they produced (partial output +
+        partial energy).  Returns the affected requests."""
+        self.set_fleet_in_service(name, False)
+        affected: List[Request] = []
+        released: List[int] = []
+        for s in self._fleets[name]:
+            req = self._active[s]
+            if req is None:
+                continue
+            affected.append(req)
+            released.append(s)
+        self._release_slots(released)
+        queued, self._queues[name] = self._queues[name], []
+        affected.extend(queued)
+        for req in affected:
+            if requeue:
+                self.requeue(req)
+            else:
+                self._expire(req)
+        return affected
+
     def _expire_active(self, now: float):
         """Release slots whose request expired before this step — no more
         tokens are decoded or charged for them."""
@@ -360,9 +561,34 @@ class BatchedServer:
             self._active_mask = self._active_mask.at[
                 np.asarray(released, np.int32)].set(False)
 
+    def idle(self) -> bool:
+        """Nothing queued, parked, or seated — the drain-loop exit test."""
+        return not self._parked \
+            and all(not q for q in self._queues.values()) \
+            and all(r is None for r in self._active)
+
     # ---------------------------------------------------------- admission
+    def _unpark(self):
+        """Re-route parked requests (drained while no fleet was in
+        service) now that capacity may have returned."""
+        if not self._parked:
+            return
+        parked, self._parked = self._parked, []
+        for req in parked:
+            try:
+                fleet = self._route(req)
+            except UnitFault:
+                self._parked.append(req)
+                continue
+            if self.chip_policy is not None:
+                req.routed_unit = fleet
+            self._queues[fleet].insert(0, req)
+
     def _admit(self, now: float):
+        self._unpark()
         for fleet, slot_ids in self._fleets.items():
+            if not self._fleet_in_service(fleet):
+                continue  # the resilience layer drains/re-routes its queue
             queue = self._queues[fleet]
             while queue:
                 free = [s for s in slot_ids if self._active[s] is None]
@@ -400,13 +626,19 @@ class BatchedServer:
         true_lens = np.ones(Mb, np.int32)
         ids = np.full(Mb, self.slots, np.int32)  # OOB pad lanes: dropped
         budgets = np.zeros(Mb, np.int32)
-        for j, (req, slot) in enumerate(zip(reqs, slot_ids)):
-            tokens[j, :len(req.prompt)] = req.prompt
-            true_lens[j] = len(req.prompt)
+        # continuations (requeued mid-flight) are admitted exactly like
+        # fresh requests — original prompt, full budget — and *replay*
+        # their committed tokens through the decode path (see the commit
+        # loop): the decode scan recomputes them bit-for-bit, so the
+        # stream resumes bitwise-identically on any fleet
+        prompts = [np.asarray(r.prompt) for r in reqs]
+        for j, (req, p, slot) in enumerate(zip(reqs, prompts, slot_ids)):
+            tokens[j, :len(p)] = p
+            true_lens[j] = len(p)
             ids[j] = slot
             cap = req.max_new_tokens - 1
             if self._len_cap is not None:
-                cap = min(cap, self._len_cap - len(req.prompt))
+                cap = min(cap, self._len_cap - len(p))
             budgets[j] = max(cap, 0)
         (self.cache, self._next_tok, self._active_mask, self._budget,
          first) = _admit_jit(
@@ -416,15 +648,21 @@ class BatchedServer:
         first = np.asarray(first)  # one host sync per admitted batch
         self.host_syncs += 1
         dead = []
-        for j, (req, slot) in enumerate(zip(reqs, slot_ids)):
+        for j, (req, p, slot) in enumerate(zip(reqs, prompts, slot_ids)):
             # the prefill charge covers the whole prompt forward pass,
-            # including the logits that produce the first output token —
-            # decode charges start with the first fused decode step
+            # including the logits that produce the next output token —
+            # decode charges start with the first fused decode step.  A
+            # requeued continuation re-prefills the prompt and re-decodes
+            # its committed tokens: that repeated work IS the energy
+            # overhead of degraded routing, accounted honestly.
             self._charge_unit(req, self._prefill_unit(req),
-                              self.flops_per_token * len(req.prompt))
-            req.output.append(int(first[j]))
+                              self.flops_per_token * len(p))
             self.tokens_decoded += 1
-            if budgets[j] == 0 or int(first[j]) in self._stop_set:
+            replay = len(req.output)  # committed tokens a continuation
+            if not replay:            # must replay, not re-commit
+                req.output.append(int(first[j]))
+            if budgets[j] == 0 or (not replay
+                                   and int(first[j]) in self._stop_set):
                 # token budget already met by the prefill logits (or the
                 # cache is full, or the very first token is an EOS):
                 # finish without occupying the slot
@@ -437,10 +675,24 @@ class BatchedServer:
                     dead.append(slot)
             else:
                 self._active[slot] = req
+                # prefill already replayed the first committed token
+                self._slot_replay[slot] = max(replay - 1, 0)
                 self._slot_quota[slot] = 1 + int(budgets[j])
         if dead:
             self._active_mask = self._active_mask.at[
                 np.asarray(dead, np.int32)].set(False)
+
+    def _filter_dispatch(self, active_slots: List[int], toks_np: np.ndarray,
+                         emitted_np: np.ndarray, now: float,
+                         dispatch_dt_s: float
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+        """Symptom hook between the device fetch and token commit.  The base
+        engine is fault-free: identity.  ``ResilientServer`` overrides this
+        to apply injected fault symptoms (kills, corruption, inflated
+        dispatch times), feed the health monitor, and drain slots whose
+        fleet just went out of service — slots it drains are skipped by the
+        commit loop."""
+        return toks_np, emitted_np
 
     # ------------------------------------------------------------ decoding
     def step(self, max_tokens: Optional[int] = None) -> int:
@@ -454,6 +706,7 @@ class BatchedServer:
         if not active_slots:
             return 0
         n = 1 if max_tokens is None else max(1, int(max_tokens))
+        t_dispatch = time.perf_counter()
         (self.cache, self._next_tok, self._active_mask, self._budget,
          toks, emitted) = _dispatch_jit(
             self.model, self.pad_id, n, self.stop_tokens, self.params,
@@ -463,13 +716,26 @@ class BatchedServer:
         self.dispatches += 1
         self.host_syncs += 1
         now = self._clock()
+        # resilience hook: fault symptoms are applied/detected on the
+        # fetched arrays before any token is committed (identity here; the
+        # ResilientServer overrides it and may drain slots)
+        toks_np, emitted_np = self._filter_dispatch(
+            active_slots, np.asarray(toks_np), np.asarray(emitted_np), now,
+            time.perf_counter() - t_dispatch)
         released = []
         for slot in active_slots:
             req = self._active[slot]
+            if req is None:  # drained by the resilience filter mid-dispatch
+                continue
             count = int(emitted_np[:, slot].sum())
             for t in range(n):
                 if emitted_np[t, slot]:
-                    req.output.append(int(toks_np[t, slot]))
+                    if self._slot_replay[slot]:
+                        # continuation replay: the decode path just
+                        # recomputed an already-committed token — skip it
+                        self._slot_replay[slot] -= 1
+                    else:
+                        req.output.append(int(toks_np[t, slot]))
             self.tokens_decoded += count
             self._charge_unit(req, self._fleet_units.get(req.routed_unit),
                               self.flops_per_token * count)
@@ -503,8 +769,7 @@ class BatchedServer:
         n = self.dispatch_tokens if dispatch_tokens is None \
             else dispatch_tokens
         for _ in range(max_steps):
-            if all(not q for q in self._queues.values()) \
-                    and all(r is None for r in self._active):
+            if self.idle():
                 break
             self.step(n)
         out, self.finished = self.finished, []

@@ -13,7 +13,12 @@ derived from a trailing median of step times; steps exceeding it are counted
 and surfaced so the deployment layer can evict/replace the slow host. The
 FPMax energy telemetry consumes the same utilization signal (a straggling
 step is a low-utilization step — exactly the paper's Fig. 4 regime where
-adaptive body bias saves the 3x leakage penalty)."""
+adaptive body bias saves the 3x leakage penalty).
+
+The fault *vocabulary* (``SimulatedFailure``, the schedule hook, and the
+serve-side unit-scoped fault types) lives in the shared ``repro.faults``
+module, so train and serve chaos tests speak the same language; this module
+re-exports the train-side names unchanged."""
 from __future__ import annotations
 
 import dataclasses
@@ -22,23 +27,10 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+from repro.faults import (SimulatedFailure,  # noqa: F401 (re-export)
+                          step_failure_schedule as failure_schedule)
 from repro.train.checkpoint import CheckpointManager
 from repro.train.train_loop import TrainState, train_loop
-
-
-class SimulatedFailure(RuntimeError):
-    pass
-
-
-def failure_schedule(fail_at_steps):
-    fired = set()
-
-    def hook(step: int):
-        if step in fail_at_steps and step not in fired:
-            fired.add(step)
-            raise SimulatedFailure(f"node failure injected at step {step}")
-
-    return hook
 
 
 def run_with_restarts(model, make_state: Callable[[], TrainState],

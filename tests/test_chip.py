@@ -326,3 +326,80 @@ def test_cell_spec_tags_routed_unit(params):
     assert _routed_unit(pol, cfg, SHAPES["train_4k"]) == "sp_fma"
     assert _routed_unit(pol, cfg, SHAPES["decode_32k"]) == "sp_cma"
     assert _routed_unit(None, cfg, SHAPES["train_4k"]) == ""
+
+
+# ------------------------------------------------------------ health model
+def test_health_change_invalidates_route_cache(params):
+    """A stale route-cache entry would keep sending traffic to a dead
+    unit: any health transition must flush the bounded cache and bump
+    health_version, and routing must then avoid the unit."""
+    pol = chip.ChipPolicy(chip.fabricated_chip(params=params), params)
+    assert pol.unit_for_phase("decode", precision="sp").name == "sp_cma"
+    assert pol._route  # cached
+    v0 = pol.health_version
+    pol.set_health("sp_cma", chip.UnitHealth.DEAD, reason="test")
+    assert pol.health_version > v0
+    assert not pol._route  # flushed with the transition
+    assert pol.unit_for_phase("decode", precision="sp").name == "sp_fma"
+    assert not pol.in_service("sp_cma")
+    pol.clear_health("sp_cma")
+    assert pol.unit_for_phase("decode", precision="sp").name == "sp_cma"
+
+
+def test_throttled_unit_deprioritized_but_still_in_service(params):
+    pol = chip.ChipPolicy(chip.fabricated_chip(params=params), params)
+    pol.set_health("sp_cma", chip.UnitHealth.THROTTLED, freq_scale=0.5,
+                   reason="thermal")
+    assert pol.in_service("sp_cma")  # degraded, still serving
+    # healthy units outrank throttled ones for new routing decisions
+    assert pol.unit_for_phase("decode", precision="sp").name == "sp_fma"
+    assert pol.unit_time_scale("sp_cma") == 2.0
+    scale = pol.unit_energy_scale("sp_cma")
+    assert 1.0 < scale <= 2.0  # leakage share repriced at half frequency
+    u = pol.spec.unit("sp_cma")
+    assert pol.unit_energy_j(u, 1e9) == pytest.approx(
+        u.energy_j(1e9) * scale)
+
+
+def test_all_units_dead_raises_unit_fault(params):
+    from repro.faults import UnitFault
+    pol = chip.ChipPolicy(chip.fabricated_chip("sp", params), params)
+    for u in pol.spec.units:
+        pol.set_health(u.name, chip.UnitHealth.DEAD)
+    with pytest.raises(UnitFault):
+        pol.unit_for_phase("decode", precision="sp")
+
+
+def test_spec_replacement_prunes_health_and_flushes_routes(params):
+    """Fleet-membership change: the route cache and the health of removed
+    units must go with it (satellite: stale entries would route to units
+    no longer on the die)."""
+    fab = chip.fabricated_chip(params=params)
+    pol = chip.ChipPolicy(fab, params)
+    pol.unit_for_phase("decode", precision="sp")
+    pol.set_health("sp_cma", chip.UnitHealth.THROTTLED, freq_scale=0.5)
+    v0 = pol.health_version
+    dp_only = chip.ChipSpec(
+        "dp-only", tuple(u for u in fab.units
+                         if u.design.precision == "dp"))
+    pol.replace_spec(dp_only)
+    assert pol.health_version > v0
+    assert not pol._route
+    with pytest.raises(KeyError):
+        pol.unit_health("sp_cma")  # pruned with the membership change
+    assert pol.unit_for_phase("decode").name == "dp_cma"
+
+
+def test_health_report_round_trips(params):
+    pol = chip.ChipPolicy(chip.fabricated_chip(params=params), params)
+    pol.set_health("sp_cma", chip.UnitHealth.QUARANTINED,
+                   reason="nan burst", now=4.2)
+    rep = pol.health_report()
+    assert rep["sp_cma"]["status"] == "quarantined"
+    assert rep["sp_cma"]["in_service"] is False
+    assert rep["sp_fma"]["status"] == "healthy"
+    assert pol.unit_health("sp_cma").since_s == 4.2
+    with pytest.raises(ValueError):
+        chip.UnitHealth(status="zombie")
+    with pytest.raises(ValueError):
+        chip.UnitHealth(freq_scale=0.0)

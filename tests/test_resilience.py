@@ -1,0 +1,375 @@
+"""Fault-tolerant serving: the degrade-don't-drop protocol under seeded
+chaos.  A unit killed mid-run with traffic in flight must lose nothing —
+every affected request completes on a surviving fleet with output
+bitwise-identical to the single-sequence reference decoder (continuations
+re-prefill the prompt and replay committed tokens through the decode path,
+the same computation that produced them, so the stream stitches exactly).  Throttles must be detected from dispatch timings alone and
+repriced; transient corruption must be ridden out by bounded retry without
+ever committing a corrupted token; persistent corruption must quarantine
+the unit and migrate its traffic.  All scenarios run against an injected
+clock + synthetic dispatch times: fully deterministic."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import chip
+from repro.core.chip import UnitHealth
+from repro.core.energy_model import calibrate
+from repro.core.formats import FP32, FP8_E4M3
+from repro.faults import (FaultEvent, FaultInjector, FaultKind,
+                          random_faults)
+from repro.models import LM
+from repro.serve.engine import Request, RequestRejected, greedy_decode
+from repro.serve.resilience import (HealthMonitor, HealthVerdict,
+                                    ResilienceConfig, ResilientServer)
+
+from helpers import FakeClock, make_chip_unit as unit
+
+TICK = 0.05
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    model = LM(cfg)
+    return cfg, model, model.init(jax.random.key(3))
+
+
+def _tiered_policy():
+    spec = chip.ChipSpec("tiered", (unit("decode_eco", FP8_E4M3, 1e-2, 0.5),
+                                    unit("decode_gold", FP32, 1e-8, 4.0)))
+    return chip.ChipPolicy(spec, calibrate())
+
+
+def _requests(cfg, n=6, new_tokens=8, **kw):
+    rng = np.random.default_rng(5)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        4 + i % 4).astype(np.int32),
+                    max_new_tokens=new_tokens, accuracy_slo=5e-2, **kw)
+            for i in range(n)]
+
+
+def _server(dense, events=(), *, probe=None, slots=4, seed=3, **res_kw):
+    cfg, model, params = dense
+    clock = FakeClock()
+    srv = ResilientServer(
+        model, params, slots=slots, max_len=64,
+        chip_policy=_tiered_policy(), accuracy_fleets=(5e-2, 1e-7),
+        dispatch_tokens=3, clock=clock,
+        injector=FaultInjector(events, seed=seed) if events else None,
+        resilience=ResilienceConfig(synthetic_dispatch_s=TICK,
+                                    probe_interval_s=probe, **res_kw))
+    return srv, clock
+
+
+def _drive(srv, clock, max_steps=300):
+    for _ in range(max_steps):
+        clock.t += TICK
+        srv.step()
+        if srv.idle():
+            break
+
+
+def _refs(dense, reqs):
+    cfg, model, params = dense
+    return {r.uid: greedy_decode(model, params, r.prompt,
+                                 r.max_new_tokens, max_len=64)
+            for r in reqs}
+
+
+# ---------------------------------------------------------- health monitor
+def test_monitor_throttle_detection_and_recovery():
+    mon = HealthMonitor(window=8, tolerance=1.5, trip=2, recover_trip=2)
+    for _ in range(6):
+        assert mon.observe_dispatch("u", 0.1) is None  # healthy baseline
+    assert mon.observe_dispatch("u", 0.4) is None      # 1st slow: no trip yet
+    v = mon.observe_dispatch("u", 0.4)                 # 2nd consecutive: trip
+    assert v is not None and v.status == UnitHealth.THROTTLED
+    assert v.freq_scale == pytest.approx(0.25, rel=0.05)  # med/dt = 0.1/0.4
+    assert mon.observe_dispatch("u", 0.1) is None      # 1st in-budget
+    v = mon.observe_dispatch("u", 0.1)                 # 2nd: recovery
+    assert v is not None and v.status == UnitHealth.HEALTHY
+
+
+def test_monitor_slow_streak_must_be_consecutive():
+    mon = HealthMonitor(window=8, tolerance=1.5, trip=3)
+    for _ in range(5):
+        mon.observe_dispatch("u", 0.1)
+    assert mon.observe_dispatch("u", 0.5) is None
+    assert mon.observe_dispatch("u", 0.5) is None
+    assert mon.observe_dispatch("u", 0.1) is None  # streak broken
+    assert mon.observe_dispatch("u", 0.5) is None  # 1/3 again: no verdict
+
+
+def test_monitor_fault_and_corruption_verdicts():
+    mon = HealthMonitor()
+    v = mon.observe_fault("u", "no output")
+    assert v.status == UnitHealth.DEAD
+    assert mon.fault_dispatches["u"] == 1
+    v = mon.observe_corruption("u", 5)
+    assert v.status == HealthVerdict.CORRUPT
+    assert mon.corrupt_dispatches["u"] == 1
+
+
+# ------------------------------------------------------------- chaos: kill
+def test_kill_midrun_loses_nothing_and_is_bitwise_identical(dense):
+    """THE acceptance scenario: the cheap fleet dies with requests seated
+    on its slots and queued behind them; every affected request completes
+    on the surviving fleet, bitwise-equal to greedy_decode, with the
+    recovery latency recorded."""
+    cfg = dense[0]
+    srv, clock = _server(
+        dense, (FaultEvent(at_s=3 * TICK, unit="decode_eco",
+                           kind=FaultKind.KILL),), probe=None)
+    reqs = _requests(cfg)
+    refs = _refs(dense, reqs)
+    for r in reqs:
+        srv.submit(r)
+    # loose-SLO traffic all starts on the cheap fleet
+    assert all(r.routed_unit == "decode_eco" for r in reqs)
+    _drive(srv, clock)
+    done = {r.uid for r in srv.finished if r.done}
+    assert done == {r.uid for r in reqs}, "requests lost"
+    for r in reqs:
+        assert not r.expired
+        assert r.output == refs[r.uid], f"uid {r.uid} diverged"
+        assert r.routed_unit == "decode_gold"  # migrated
+        assert r.requeues >= 1
+    rep = srv.resilience_report()
+    assert rep["health"]["decode_eco"]["status"] == UnitHealth.DEAD
+    assert not rep["health"]["decode_eco"]["in_service"]
+    kills = [f for f in rep["fault_log"] if f["kind"] == FaultKind.KILL]
+    assert kills and kills[0]["recovered_s"] is not None
+    assert rep["recovery_latency_s"]["max"] > 0.0
+    # partial work on the dead fleet stays charged: honest energy
+    seated_first = [r for r in reqs if "decode_eco" in r.unit_energy_j]
+    assert seated_first, "no request was ever charged on the dead fleet"
+
+
+def test_kill_of_every_fleet_parks_requests_never_drops(dense):
+    """Total capacity loss: drained requests are parked (not dropped, not
+    expired); new submissions surface UnitFault; a probe restoring a
+    fleet drains the parking lot and finishes everything bitwise."""
+    from repro.faults import UnitFault
+    cfg = dense[0]
+    srv, clock = _server(
+        dense, (FaultEvent(at_s=TICK, unit="decode_eco",
+                           kind=FaultKind.KILL),
+                FaultEvent(at_s=TICK, unit="decode_gold",
+                           kind=FaultKind.KILL, duration_s=4 * TICK)),
+        probe=6 * TICK)
+    reqs = _requests(cfg, n=3)
+    refs = _refs(dense, reqs)
+    for r in reqs:
+        srv.submit(r)
+    for _ in range(3):  # both fleets die; everything drains to the lot
+        clock.t += TICK
+        srv.step()
+    assert srv._parked, "drained requests were not parked"
+    assert not any(r.done or r.expired for r in reqs)
+    with pytest.raises(UnitFault):
+        srv.submit(Request(uid=9, prompt=reqs[0].prompt, max_new_tokens=2))
+    _drive(srv, clock)  # gold's fault ends; the probe restores it
+    for r in reqs:
+        assert r.done and r.output == refs[r.uid]
+    assert not srv._parked
+
+
+# --------------------------------------------------------- chaos: throttle
+def test_throttle_detected_and_energy_repriced(dense):
+    """A thermal derate is detected from inflated dispatch times alone
+    (the injector never talks to the monitor) and the unit's energy is
+    repriced: leakage energy/FLOP grows as 1/freq_scale."""
+    cfg = dense[0]
+    srv, clock = _server(
+        dense, (FaultEvent(at_s=3 * TICK, unit="decode_eco",
+                           kind=FaultKind.THROTTLE, magnitude=0.5),),
+        probe=None)
+    reqs = _requests(cfg, n=4, new_tokens=10)
+    refs = _refs(dense, reqs)
+    for r in reqs:
+        srv.submit(r)
+    _drive(srv, clock)
+    for r in reqs:
+        assert r.done and r.output == refs[r.uid]
+    rep = srv.resilience_report()
+    h = rep["health"]["decode_eco"]
+    assert h["status"] == UnitHealth.THROTTLED
+    assert h["in_service"]  # degraded, still serving
+    assert h["freq_scale"] == pytest.approx(0.5, rel=0.1)
+    assert h["energy_scale"] > 1.0
+    assert [f for f in rep["fault_log"]
+            if f["kind"] == FaultKind.THROTTLE]
+
+
+def test_throttled_unit_costs_more_per_flop(dense):
+    policy = _tiered_policy()
+    u = policy.spec.unit("decode_eco")
+    base = policy.unit_energy_j(u, 1e9)
+    policy.set_health("decode_eco", UnitHealth.THROTTLED, freq_scale=0.5)
+    derated = policy.unit_energy_j(u, 1e9)
+    assert derated > base
+    # dyn share unchanged, leak share doubled at half frequency
+    scale = policy.unit_energy_scale("decode_eco")
+    assert 1.0 < scale <= 2.0
+
+
+# ------------------------------------------------------- chaos: corruption
+def test_transient_corruption_retried_with_backoff_no_bad_tokens(dense):
+    cfg = dense[0]
+    srv, clock = _server(
+        dense, (FaultEvent(at_s=3 * TICK, unit="decode_eco",
+                           kind=FaultKind.CORRUPT, duration_s=3 * TICK,
+                           magnitude=1.0),),
+        probe=1.0, backoff_base_s=2 * TICK)
+    reqs = _requests(cfg)
+    refs = _refs(dense, reqs)
+    for r in reqs:
+        srv.submit(r)
+    _drive(srv, clock)
+    bad = FaultInjector.CORRUPT_TOKEN
+    for r in reqs:
+        assert r.done and not r.expired
+        assert bad not in r.output  # corrupted output is never committed
+        assert r.output == refs[r.uid]
+    rep = srv.resilience_report()
+    assert sum(rep["corrupt_dispatches"].values()) >= 1
+    assert srv.wasted_energy_j > 0.0  # the garbage work was still paid for
+
+
+def test_persistent_corruption_quarantines_and_migrates(dense):
+    cfg = dense[0]
+    srv, clock = _server(
+        dense, (FaultEvent(at_s=3 * TICK, unit="decode_eco",
+                           kind=FaultKind.CORRUPT, magnitude=1.0),),
+        probe=None, max_retries=2, backoff_base_s=TICK)
+    reqs = _requests(cfg)
+    refs = _refs(dense, reqs)
+    for r in reqs:
+        srv.submit(r)
+    _drive(srv, clock)
+    for r in reqs:
+        assert r.done and r.output == refs[r.uid]
+        assert r.routed_unit == "decode_gold"
+    rep = srv.resilience_report()
+    assert rep["health"]["decode_eco"]["status"] == UnitHealth.QUARANTINED
+    assert not rep["health"]["decode_eco"]["in_service"]
+
+
+def test_probe_restores_fleet_after_transient_kill(dense):
+    """Flap recovery: a kill that ends is optimistically re-probed after
+    the interval; the fleet rejoins and later traffic routes to it."""
+    cfg = dense[0]
+    srv, clock = _server(
+        dense, (FaultEvent(at_s=3 * TICK, unit="decode_eco",
+                           kind=FaultKind.KILL, duration_s=4 * TICK),),
+        probe=6 * TICK)
+    first = _requests(cfg)
+    for r in first:
+        srv.submit(r)
+    _drive(srv, clock)
+    assert all(r.done for r in first)
+    # fault is over and the probe interval elapsed during the drive
+    late = Request(uid=99, prompt=first[0].prompt,
+                   max_new_tokens=4, accuracy_slo=5e-2)
+    srv.submit(late)
+    assert late.routed_unit == "decode_eco"  # back in rotation
+    _drive(srv, clock)
+    assert late.done
+    assert srv.chip_policy.in_service("decode_eco")
+
+
+# ---------------------------------------------- backpressure / shedding
+def test_backpressure_rejects_when_degraded_and_saturated(dense):
+    cfg = dense[0]
+    srv, _ = _server(dense, backpressure_depth=0.5)
+    srv.chip_policy.set_health("decode_eco", UnitHealth.THROTTLED,
+                               freq_scale=0.5, reason="test")
+    reqs = _requests(cfg, n=4)
+    srv.submit(reqs[0])  # depth 0 < 1: accepted
+    with pytest.raises(RequestRejected) as exc:
+        srv.submit(reqs[1])  # eco queue depth 1 >= 0.5 * 2 slots
+    assert exc.value.code == "backpressure"
+    assert reqs[1].rejected and "backpressure" in reqs[1].reject_reason
+    assert reqs[1] in srv.rejected
+
+
+def test_deadline_shedding_under_shrunk_capacity(dense):
+    cfg = dense[0]
+    srv, clock = _server(dense, shed_unmeetable=True)
+    srv.chip_policy.set_health("decode_eco", UnitHealth.THROTTLED,
+                               freq_scale=0.1, reason="test")
+    hopeless = Request(uid=0, prompt=_requests(cfg, 1)[0].prompt,
+                       max_new_tokens=30, accuracy_slo=5e-2,
+                       deadline_s=clock.t + TICK / 10)
+    patient = Request(uid=1, prompt=_requests(cfg, 1)[0].prompt,
+                      max_new_tokens=4, accuracy_slo=5e-2)
+    srv.submit(hopeless)
+    srv.submit(patient)
+    clock.t += TICK
+    srv.step()
+    assert hopeless.rejected
+    assert "shed_unmeetable" in hopeless.reject_reason
+    assert hopeless in srv.shed_requests and hopeless in srv.rejected
+    _drive(srv, clock)
+    assert patient.done and not patient.rejected
+
+
+# -------------------------------------------------------- validation rejects
+@pytest.mark.parametrize("field,value,code", [
+    ("max_new_tokens", 0, "bad_max_tokens"),
+    ("max_new_tokens", "ten", "bad_max_tokens"),
+    ("accuracy_slo", -1e-3, "bad_accuracy_slo"),
+    ("precision", "fp4", "unknown_precision"),
+    ("accuracy_slo", 1e-30, "accuracy_slo_unmeetable"),
+])
+def test_submit_validation_structured_rejects(dense, field, value, code):
+    cfg = dense[0]
+    srv, _ = _server(dense)
+    kw = dict(uid=0, prompt=np.arange(4, dtype=np.int32), max_new_tokens=4)
+    kw[field] = value
+    req = Request(**kw)
+    with pytest.raises(RequestRejected) as exc:
+        srv.submit(req)
+    assert exc.value.code == code
+    assert req.rejected and f"[{code}]" in req.reject_reason
+    assert req in srv.rejected
+    assert all(not q for q in srv._queues.values())  # never enqueued
+
+
+def test_submit_validation_prompt_shape_and_dtype(dense):
+    srv, _ = _server(dense)
+    for prompt, code in [
+            (np.zeros((2, 2), np.int32), "bad_prompt"),
+            (np.zeros(0, np.int32), "bad_prompt"),
+            (np.zeros(4, np.float32), "bad_prompt"),
+            (np.zeros(4096, np.int32), "prompt_too_long")]:
+        req = Request(uid=0, prompt=prompt, max_new_tokens=4)
+        with pytest.raises(RequestRejected) as exc:
+            srv.submit(req)
+        assert exc.value.code == code
+
+
+# --------------------------------------------------------------- soak/flap
+def test_random_chaos_soak_never_drops_requests(dense):
+    """Seeded random kills/throttles/corruptions over both fleets: no
+    matter the schedule, nothing is lost and every finished output is
+    bitwise-identical to the reference."""
+    cfg = dense[0]
+    events = random_faults(["decode_eco", "decode_gold"], horizon_s=2.0,
+                           n_events=5, seed=11, mean_duration_s=0.4)
+    # never leave both fleets permanently dead: durations are finite and
+    # the probe re-admits, so the soak always drains
+    srv, clock = _server(dense, tuple(events), probe=0.5,
+                         backoff_base_s=TICK)
+    reqs = _requests(cfg, n=8)
+    refs = _refs(dense, reqs)
+    for r in reqs:
+        srv.submit(r)
+    _drive(srv, clock, max_steps=600)
+    done = {r.uid for r in srv.finished if r.done}
+    assert done == {r.uid for r in reqs}
+    for r in reqs:
+        assert r.output == refs[r.uid]

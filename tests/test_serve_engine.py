@@ -174,3 +174,69 @@ def test_engine_without_chip_policy_is_unchanged(setup):
         assert r.routed_unit == "" and r.energy_j == 0.0
         assert r.unit_energy_j == {}
     assert server.energy_report()["chip"] is None
+
+
+# ------------------------------------------------------- drain / force-drain
+def test_force_drain_finishes_partial_and_releases_slots(setup):
+    """Force-drain (requeue=False) mid-flight: seated requests finish as
+    expired with exactly the tokens + per-unit energy they had, queued
+    ones with zero of both; host and device slot state is fully
+    released and nothing further is charged."""
+    _, cfg, _, _ = setup
+    clock = FakeClock(0.0)
+    server = _server(setup, slots=2, clock=clock)
+    seated = [Request(uid=i, prompt=p, max_new_tokens=50)
+              for i, p in enumerate(_prompts(cfg, 2))]
+    queued = Request(uid=2, prompt=_prompts(cfg, 3)[2], max_new_tokens=4)
+    for r in seated:
+        server.submit(r)
+    server.submit(queued)
+    server.step()
+    server.step()
+    fleet = seated[0].routed_unit
+    assert all(a is not None for a in server._active)
+    snap = {r.uid: (len(r.output), r.energy_j, dict(r.unit_energy_j))
+            for r in seated}
+    assert all(e > 0 and per for _, e, per in snap.values())
+    affected = server.drain_fleet(fleet, requeue=False)
+    assert {r.uid for r in affected} == {0, 1, 2}
+    assert server._active == [None, None]
+    assert not bool(np.asarray(server._active_mask).any())
+    for r in seated:
+        n, e, per_unit = snap[r.uid]
+        assert r.done and r.expired
+        assert len(r.output) == n  # cut off at the drain boundary
+        assert r.energy_j == e and r.unit_energy_j == per_unit  # frozen
+    assert queued.done and queued.expired
+    assert queued.output == [] and queued.energy_j == 0.0
+    total = sum(server._unit_energy_j.values())
+    assert server.step() == 0  # fleet out of service: nothing to do
+    assert sum(server._unit_energy_j.values()) == total
+
+
+def test_drain_requeue_parks_until_capacity_returns_bitwise(setup):
+    """Drain with requeue on a single-fleet engine: nowhere to go, so the
+    in-flight request parks (never drops); restoring the fleet resumes it
+    via decode-path replay, bitwise-identical to the reference."""
+    from repro.serve.engine import greedy_decode
+    _, cfg, model, model_params = setup
+    clock = FakeClock(0.0)
+    server = _server(setup, slots=1, clock=clock)
+    req = Request(uid=0, prompt=_prompts(cfg, 1)[0], max_new_tokens=6)
+    ref = greedy_decode(model, model_params, req.prompt, 6, max_len=32)
+    server.submit(req)
+    server.step()
+    server.step()
+    assert 0 < len(req.output) < 6
+    partial = req.energy_j
+    fleet = req.routed_unit
+    server.drain_fleet(fleet, requeue=True)
+    assert server._parked == [req] and req.requeues == 1
+    assert not req.done and not req.expired
+    assert server.step() == 0  # parked, zero capacity: nothing decoded
+    server.set_fleet_in_service(fleet, True)
+    finished = server.run()
+    assert req in finished and req.done and not req.expired
+    assert req.output == ref
+    # the replayed tokens were paid for again: recovery is never free
+    assert req.energy_j > partial
