@@ -1,0 +1,23 @@
+"""Cluster-scale serving and co-design: many tuned dies behind one
+front-end.
+
+  * ``ClusterSpec`` / ``homogeneous`` — the budget-validated die inventory;
+  * ``ClusterRouter`` / ``SimClock`` — health-aware, least-loaded
+    precision/accuracy/deadline admission routing with degrade-don't-drop
+    cross-die migration (``docs/cluster.md``);
+  * ``TraceConfig`` / ``RequestClass`` / ``generate`` / ``replay`` /
+    ``latency_stats`` — the seeded bursty/diurnal open-loop load generator;
+  * ``ChipClass`` / ``tune_cluster`` — chip-mix + fleet-size co-design
+    under total area/TDP budgets.
+"""
+from repro.cluster.loadgen import (Arrival, RequestClass, TraceConfig,
+                                   generate, latency_stats, replay)
+from repro.cluster.router import ClusterRouter, SimClock
+from repro.cluster.spec import ClusterSpec, homogeneous
+from repro.cluster.tune import ChipClass, ClusterTuneResult, tune_cluster
+
+__all__ = [
+    "Arrival", "ChipClass", "ClusterRouter", "ClusterSpec",
+    "ClusterTuneResult", "RequestClass", "SimClock", "TraceConfig",
+    "generate", "homogeneous", "latency_stats", "replay", "tune_cluster",
+]

@@ -1,0 +1,204 @@
+"""Trace-driven open-loop load generation for the cluster bench.
+
+Open-loop means arrivals come from a clock, not from the server having
+freed a slot — the only way to see real queueing behavior (p99 latency
+under bursts) instead of the closed-loop mirage where load self-throttles.
+
+The arrival process composes the two dominant structures of production
+serving traffic:
+
+  * **Diurnal modulation** — a sinusoidal rate envelope
+    ``rate(t) = base * (1 + A * sin(2*pi*t/period))``;
+  * **Bursts** — a 2-state Markov-modulated Poisson process (MMPP): a
+    background/burst state pair with exponential holding times, the burst
+    state multiplying the instantaneous rate.
+
+Arrivals are drawn by Lewis-Shedler thinning against the envelope's peak
+rate, so the nonhomogeneous process is exact, and the whole trace is a
+pure function of ``TraceConfig`` (seeded ``np.random.default_rng``) —
+replaying a trace is deterministic.
+
+Each arrival carries a request class sampled from the configured mix:
+prompt length, token budget, precision, accuracy class, and deadline
+slack (None = bulk traffic), covering every routing dimension the
+cluster front-end discriminates on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serve.engine import Request, RequestRejected
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestClass:
+    """One stratum of the traffic mix."""
+
+    name: str
+    weight: float = 1.0
+    prompt_lens: Tuple[int, ...] = (4, 6, 8)
+    max_new_tokens: int = 12
+    precision: Optional[str] = None
+    accuracy_slo: Optional[float] = None
+    #: deadline = arrival time + slack; None = bulk (no deadline)
+    deadline_slack_s: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceConfig:
+    """Knobs of the seeded arrival process (see module docstring)."""
+
+    horizon_s: float = 30.0
+    base_rate_rps: float = 1.0
+    diurnal_amplitude: float = 0.5   # 0 = flat envelope
+    diurnal_period_s: float = 20.0
+    burst_multiplier: float = 3.0    # rate factor while the MMPP is ON
+    burst_on_s: float = 2.0          # mean burst duration
+    burst_off_s: float = 8.0         # mean gap between bursts
+    classes: Tuple[RequestClass, ...] = (RequestClass("default"),)
+    seed: int = 0
+
+    def __post_init__(self):
+        if not (0.0 <= self.diurnal_amplitude <= 1.0):
+            raise ValueError("diurnal_amplitude must be in [0, 1]")
+        if self.burst_multiplier < 1.0:
+            raise ValueError("burst_multiplier must be >= 1")
+        if not self.classes:
+            raise ValueError("need at least one request class")
+
+
+@dataclasses.dataclass
+class Arrival:
+    at_s: float
+    cls: str
+    request: Request
+
+
+def _burst_intervals(cfg: TraceConfig, rng) -> List[Tuple[float, float]]:
+    """Seeded MMPP ON intervals over the horizon."""
+    out, t, on = [], 0.0, False
+    while t < cfg.horizon_s:
+        if on:
+            dur = rng.exponential(cfg.burst_on_s)
+            out.append((t, min(t + dur, cfg.horizon_s)))
+        else:
+            dur = rng.exponential(cfg.burst_off_s)
+        t += dur
+        on = not on
+    return out
+
+
+def generate(cfg: TraceConfig, vocab_size: int, *,
+             start_uid: int = 0) -> List[Arrival]:
+    """The full seeded trace: time-ordered ``Arrival`` rows."""
+    rng = np.random.default_rng(cfg.seed)
+    bursts = _burst_intervals(cfg, rng)
+
+    def in_burst(t: float) -> bool:
+        return any(a <= t < b for a, b in bursts)
+
+    def rate(t: float) -> float:
+        r = cfg.base_rate_rps * (
+            1.0 + cfg.diurnal_amplitude
+            * math.sin(2.0 * math.pi * t / cfg.diurnal_period_s))
+        return r * (cfg.burst_multiplier if in_burst(t) else 1.0)
+
+    peak = cfg.base_rate_rps * (1.0 + cfg.diurnal_amplitude) \
+        * cfg.burst_multiplier
+    weights = np.asarray([c.weight for c in cfg.classes], float)
+    weights /= weights.sum()
+
+    out: List[Arrival] = []
+    t, uid = 0.0, start_uid
+    while True:
+        t += rng.exponential(1.0 / peak)   # Lewis-Shedler thinning
+        if t >= cfg.horizon_s:
+            break
+        if rng.random() * peak > rate(t):
+            continue
+        cls = cfg.classes[int(rng.choice(len(cfg.classes), p=weights))]
+        plen = int(cls.prompt_lens[int(rng.integers(len(cls.prompt_lens)))])
+        req = Request(
+            uid=uid,
+            prompt=rng.integers(0, vocab_size, plen).astype(np.int32),
+            max_new_tokens=cls.max_new_tokens,
+            precision=cls.precision,
+            accuracy_slo=cls.accuracy_slo,
+            deadline_s=(t + cls.deadline_slack_s
+                        if cls.deadline_slack_s is not None else None))
+        out.append(Arrival(at_s=t, cls=cls.name, request=req))
+        uid += 1
+    return out
+
+
+def replay(target, arrivals: Sequence[Arrival], clock, *,
+           tick_s: float, dispatch_tokens: Optional[int] = None,
+           max_steps: int = 100_000,
+           carryover: Optional[Dict[int, float]] = None
+           ) -> Dict[str, object]:
+    """Open-loop replay of a trace against a server or ``ClusterRouter``.
+
+    ``clock`` must be the settable time source (``SimClock``) the target
+    was built with; the replay advances it by ``tick_s`` per step, submits
+    every arrival whose time has come, and steps the target — arrivals
+    never wait for capacity (that is the point).  Returns per-request
+    latency records (completion time - arrival time, finished requests
+    only), the finished/rejected/expired partition, and the trace span.
+
+    ``carryover`` maps uid -> original arrival time for requests already
+    in flight on the target from an earlier replay window (e.g. traffic
+    that survived a mid-trace die failure), so their latency is charged
+    from their true arrival.
+    """
+    pending = sorted(arrivals, key=lambda a: a.at_s)
+    submit_t = dict(carryover or {})
+    submit_t.update({a.request.uid: a.at_s for a in pending})
+    latency: Dict[int, float] = {}
+    classes = {a.request.uid: a.cls for a in pending}
+    finished = []
+    rejected = []
+    i = 0
+    for _ in range(max_steps):
+        clock.t += tick_s
+        while i < len(pending) and pending[i].at_s <= clock.t:
+            try:
+                target.submit(pending[i].request)
+            except RequestRejected:
+                rejected.append(pending[i].request)
+            i += 1
+        target.step(dispatch_tokens)
+        for req in _drain_finished(target):
+            finished.append(req)
+            t0 = submit_t.get(req.uid)
+            if t0 is not None:
+                latency[req.uid] = clock.t - t0
+        if i >= len(pending) and target.idle():
+            break
+    expired = [r for r in finished if r.expired]
+    return dict(finished=finished, rejected=rejected, expired=expired,
+                latency_s={u: latency[u] for u in sorted(latency)},
+                classes=classes, span_s=clock.t,
+                submitted=len(pending) - len(rejected))
+
+
+def _drain_finished(target) -> List[Request]:
+    if hasattr(target, "drain_finished"):   # ClusterRouter
+        return target.drain_finished()
+    out, target.finished = target.finished, []
+    return out
+
+
+def latency_stats(latency_s: Dict[int, float]) -> Dict[str, float]:
+    """p50/p99/mean over a replay's latency records."""
+    if not latency_s:
+        return dict(n=0, p50_s=0.0, p99_s=0.0, mean_s=0.0, max_s=0.0)
+    v = np.asarray(sorted(latency_s.values()))
+    return dict(n=int(v.size),
+                p50_s=float(np.percentile(v, 50)),
+                p99_s=float(np.percentile(v, 99)),
+                mean_s=float(v.mean()),
+                max_s=float(v.max()))

@@ -98,7 +98,14 @@ def _two_sum(a, b):
     return s, e
 
 
-_SPLIT = jnp.float64(134217729.0)  # 2**27 + 1, Dekker split constant for f64
+# 2**27 + 1, Dekker split constant for f64.  A *Python* float, not a jnp
+# array: this line runs at import time, outside any enable_x64 scope, where
+# jnp.float64(...) silently truncates to f32 — and 2**27 + 1 needs 28
+# significand bits, so the truncated constant would be 2**27 and every
+# Dekker split (hence dp_fma's error term) would be wrong.  A weakly-typed
+# Python scalar promotes to the f64 of its operand inside the x64-scoped
+# kernels with the value preserved exactly.
+_SPLIT = 134217729.0
 
 
 def _split(a):

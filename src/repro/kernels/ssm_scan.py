@@ -4,7 +4,8 @@ h_t = a_t * h_{t-1} + b_t ;  y_t = <h_t, C_t>
 
 The XLA lowering of this recurrence materializes the (B, S, d_inner, d_state)
 expansion to HBM (~1 MB/token for falcon-mamba-7b — the dominant memory-
-roofline term measured in EXPERIMENTS.md §Perf).  This kernel keeps the
+roofline term measured by repro.launch.hillclimb, see
+results/perf_iterations.json).  This kernel keeps the
 expansion in VMEM: each grid step loads a (chunk x d_block) tile of the raw
 per-token inputs (a-decay, b-injection, C-readout), runs the recurrence
 sequentially in registers/VMEM, and writes only y (chunk x d_block) and the

@@ -1,9 +1,8 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
-MUST be run as a script/module (the XLA_FLAGS line above executes before any
-jax import — jax locks the device count at first init).
+MUST be run as a script/module (the device-count flag below executes before
+any jax import — jax locks the device count at first init; the merge helper
+preserves any XLA_FLAGS the user already set).
 
 Per cell: jit with explicit in_shardings, .lower(**ShapeDtypeStructs),
 .compile(), then record memory_analysis() + cost_analysis() + the parsed
@@ -14,6 +13,12 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b
   PYTHONPATH=src python -m repro.launch.dryrun --mesh single --shape train_4k
 """
+import os
+
+from repro.launch.xla_flags import force_host_device_count
+
+force_host_device_count(512)
+
 import argparse
 import json
 import time
@@ -37,7 +42,8 @@ CPU_COMPILER_OPTIONS = {
 
 # per-arch gradient-accumulation defaults sized so remat carries
 # (n_layers x B_local x S x d_model) + optimizer state fit a 16GB v5e
-# Post-hillclimb picks (EXPERIMENTS.md §Perf): collective bytes scale with
+# Post-hillclimb picks (results/perf_iterations.json, via
+# repro.launch.hillclimb): collective bytes scale with
 # microbatch count (per-mb dW reductions), so each arch runs the FEWEST
 # microbatches whose remat carries + optimizer still fit 16GB/chip.
 MICROBATCHES = {

@@ -1,12 +1,22 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 """Perf hillclimb driver: hypothesis -> change -> re-lower -> record, for the
-three selected cells (EXPERIMENTS.md §Perf).
+three selected cells (results/perf_iterations.json, rendered into the
+§Perf tables by scripts/make_experiments_md.py).
 
 Each iteration re-runs the dry-run cell with a configuration override and
 records the three roofline terms + the fused-kernel memory term.  Results are
 appended to results/perf_iterations.json.
+
+MUST be run as a script/module: the device-count flag below executes before
+any jax import (jax locks the device count at first init).  The generic
+local-search engine this driver's accept/reject loop grew into lives in
+``repro.core.localsearch`` — importable anywhere, no env side effects.
 """
+import os
+
+from repro.launch.xla_flags import force_host_device_count
+
+force_host_device_count(512)
+
 import argparse
 import json
 import time
@@ -63,7 +73,8 @@ def main():
     args = ap.parse_args()
     rows = []
     if os.path.exists(args.out):
-        rows = json.load(open(args.out))
+        with open(args.out) as f:
+            rows = json.load(f)
 
     plan = [
         # (arch, shape, mb, label, hypothesis)
@@ -95,7 +106,8 @@ def main():
         except Exception as e:  # noqa: BLE001
             rows.append(dict(arch=arch, shape=shape, label=label,
                              error=str(e)))
-        json.dump(rows, open(args.out, "w"), indent=1)
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,56 @@
+"""XLA_FLAGS environment merging for the launch drivers.
+
+The dry-run and hillclimb drivers need
+``--xla_force_host_platform_device_count=N`` set *before* the first jax
+import (jax locks the device count at first init).  Both used to do that
+with a blind ``os.environ["XLA_FLAGS"] = ...``, silently discarding any
+flags the user had already set (dumping options, determinism flags, memory
+knobs).  This module is the one shared way to set a flag: it merges into
+the existing value, replacing only a flag the caller explicitly overrides
+and preserving everything else.
+
+Deliberately imports nothing heavy (in particular, no jax): importing it
+can never lock device state.
+"""
+from __future__ import annotations
+
+import os
+from typing import Mapping, Optional
+
+
+def merge_xla_flags(new_flags: Mapping[str, object],
+                    env: Optional[dict] = None) -> str:
+    """Merge ``{flag_name: value}`` into ``env['XLA_FLAGS']`` and return
+    the merged string.
+
+    Flag names are the bare names (``xla_force_host_platform_device_count``);
+    values are formatted as ``--name=value`` (a ``True`` value becomes the
+    bare ``--name``).  Flags already present keep their position; only a
+    flag named in ``new_flags`` has its value replaced.  Unrecognized /
+    user-set flags pass through untouched.
+    """
+    env = os.environ if env is None else env
+    existing = env.get("XLA_FLAGS", "").split()
+
+    def render(name: str, value: object) -> str:
+        return f"--{name}" if value is True else f"--{name}={value}"
+
+    pending = dict(new_flags)
+    merged = []
+    for tok in existing:
+        name = tok.lstrip("-").split("=", 1)[0]
+        if name in pending:
+            merged.append(render(name, pending.pop(name)))
+        else:
+            merged.append(tok)
+    merged.extend(render(n, v) for n, v in pending.items())
+    flags = " ".join(merged)
+    env["XLA_FLAGS"] = flags
+    return flags
+
+
+def force_host_device_count(n: int, env: Optional[dict] = None) -> str:
+    """Set the forced host-platform device count, preserving every other
+    user-set XLA flag.  Must run before the first jax import."""
+    return merge_xla_flags(
+        {"xla_force_host_platform_device_count": int(n)}, env=env)

@@ -321,6 +321,57 @@ class BatchedServer:
             active=sum(1 for s in ids if self._active[s] is not None))
             for name, ids in self._fleets.items()}
 
+    def load_report(self) -> Dict[str, float]:
+        """Instantaneous load signal for cluster-level routing: queued /
+        seated / parked request counts plus the token backlog (tokens the
+        seated and queued requests still have to decode) normalized against
+        the slots still in service.  Pure host-side bookkeeping — no device
+        sync."""
+        queued = sum(len(q) for q in self._queues.values())
+        active_tokens = 0
+        active = 0
+        for s, req in enumerate(self._active):
+            if req is None:
+                continue
+            active += 1
+            active_tokens += max(self._slot_quota[s] - len(req.output), 0)
+        queued_tokens = sum(r.max_new_tokens
+                            for q in self._queues.values() for r in q)
+        serving_slots = sum(len(ids) for n, ids in self._fleets.items()
+                            if self._fleet_in_service(n))
+        backlog = active_tokens + queued_tokens
+        return dict(queued=queued, active=active, parked=len(self._parked),
+                    slots=self.slots, serving_slots=serving_slots,
+                    backlog_tokens=backlog,
+                    load=backlog / max(serving_slots, 1))
+
+    def evacuate(self) -> List[Request]:
+        """Release every in-flight, queued, and parked request untouched
+        (partial output and energy kept, device lanes deactivated) and hand
+        them back — the cluster router's whole-die drain.  The requests are
+        continuations: re-admitting them anywhere (``requeue`` on any
+        server sharing this model+params) replays their committed tokens
+        through the decode path and resumes the streams bitwise."""
+        out: List[Request] = []
+        released: List[int] = []
+        for s, req in enumerate(self._active):
+            if req is not None:
+                out.append(req)
+                released.append(s)
+        self._release_slots(released)
+        for name in self._queues:
+            out.extend(self._queues[name])
+            self._queues[name] = []
+        out.extend(self._parked)
+        self._parked = []
+        return out
+
+    def take_parked(self) -> List[Request]:
+        """Hand over the parked requests (drained with no fleet in service)
+        for placement elsewhere — the cluster router's rescue hook."""
+        parked, self._parked = self._parked, []
+        return parked
+
     def _fleet_in_service(self, name: str) -> bool:
         """A fleet is routable when the engine hasn't taken it out of
         service AND the chip's health model still lists its unit as

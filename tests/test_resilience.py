@@ -353,6 +353,7 @@ def test_submit_validation_prompt_shape_and_dtype(dense):
 
 
 # --------------------------------------------------------------- soak/flap
+@pytest.mark.slow
 def test_random_chaos_soak_never_drops_requests(dense):
     """Seeded random kills/throttles/corruptions over both fleets: no
     matter the schedule, nothing is lost and every finished output is

@@ -23,6 +23,10 @@ from repro.core import softfloat as sf
 from repro.core.formats import BF16, FloatFormat
 from repro.numerics import REGISTRY
 
+# Exhaustive property sweep over the whole format ladder: minutes of wall
+# clock, so it rides in the slow lane (CI fast lane runs -m "not slow").
+pytestmark = pytest.mark.slow
+
 # The whole sub-f32 transprecision ladder of the registry (satellite: the
 # fp8 tiers join the suite) — every format the tuner can downshift to is
 # property-tested against the exact rational oracle.
