@@ -48,6 +48,13 @@ GUARDS = {
     "cluster_bench.json": (("p99_latency_s", "lower"),
                            ("energy_per_request_j", "lower"),
                            ("completed_frac", "higher")),
+    # fused transprecision kernel path: warm cost relative to the same-run
+    # native matmul (runner speed cancels out of the ratio)
+    "kernel_bench.json": (("overhead_fused_vs_native", "lower"),),
+    # generated-kernel model check: fraction of KernelSpecs whose measured
+    # time lands within the machine-model tolerance of its roofline
+    # prediction (the bench hard-asserts a floor before appending)
+    "benchgen_bench.json": (("frac_within_tol", "higher"),),
 }
 
 

@@ -1,0 +1,38 @@
+"""``repro.benchgen`` — generated, roofline-verified kernel microbenchmarks.
+
+FPMax is a *generator* study: every FPU variant is generated from parameters,
+then measured against its model.  This package applies the same discipline to
+the fused transprecision kernels — a ``KernelSpec`` (op x format x shape x
+accumulation style) generates a runnable microbenchmark kernel *and* an
+analytic prediction from the roofline machinery, and ``validate()`` holds the
+two against each other under a machine-model tolerance (the
+stempel/kerncraft generate-kernel-from-spec-then-check-machine-model
+pattern).  This closes the loop between measured kernel throughput and the
+roofline model the chip/cluster tuners price designs with.
+
+  * ``spec``    — ``KernelSpec`` + ``op_counts`` (the analytic work/traffic
+                  model of the generated kernel's schedule) + ``build`` (the
+                  runnable benchmark closure);
+  * ``machine`` — ``MachineModel`` (per-pipe sustained rates) with
+                  ``calibrate()`` measuring the current backend and
+                  ``paper_machine()`` carrying the TPU constants of
+                  ``launch/mesh``;
+  * ``bench``   — ``predict`` (a ``roofline.analysis.RooflineReport`` over
+                  the spec's counts), ``measure``, ``validate`` and
+                  ``default_specs``.
+"""
+from repro.benchgen.bench import (  # noqa: F401
+    default_specs, measure, predict, validate,
+)
+from repro.benchgen.machine import (  # noqa: F401
+    MachineModel, calibrate, paper_machine,
+)
+from repro.benchgen.spec import (  # noqa: F401
+    OPS, KernelSpec, build, make_inputs, op_counts,
+)
+
+__all__ = [
+    "KernelSpec", "OPS", "op_counts", "make_inputs", "build",
+    "MachineModel", "calibrate", "paper_machine",
+    "predict", "measure", "validate", "default_specs",
+]

@@ -1,6 +1,10 @@
 """Pallas TPU kernels for the FPMax numerics policies + compute hot spots.
 
 fma_emu.py         — emulated-precision matmul (fused/cascade/cascade_fwd)
+fused.py           — fused transprecision kernels: quantize+matmul+dequant
+                     (fused_qmm), blockwise flash attention with per-block
+                     dequant, operand-quantized selective scan — one
+                     pallas_call each, bitwise ref twins included
 quantize_kernel.py — elementwise round-to-format
 ssm_scan.py        — fused selective-scan (the Mamba recurrence in VMEM;
                      kills the dominant memory-roofline term of the SSM archs)

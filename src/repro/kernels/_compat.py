@@ -1,0 +1,12 @@
+"""Pallas API compatibility across jax versions.
+
+``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` in newer
+jax releases; resolve whichever this environment ships so the kernels (and
+their interpret-mode CI lane) run on both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _compat
 from repro.core.formats import FloatFormat, quantize
 
 STYLES = ("fused", "cascade", "cascade_fwd")
@@ -107,7 +108,7 @@ def fma_emu_matmul(
         out_shape=jax.ShapeDtypeStruct((m + pm, n + pn), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
     )(a_p, b_p)

@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _compat
+
 
 def _ssm_scan_kernel(a_ref, b_ref, c_ref, y_ref, h_ref, hstate,
                      *, nchunks: int, chunk: int):
@@ -87,7 +89,7 @@ def ssm_scan(a, b, c, *, chunk: int = 64, bd: int = 256,
         ],
         scratch_shapes=[pltpu.VMEM((bd, N), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(a.astype(jnp.float32), b.astype(jnp.float32), c.astype(jnp.float32))
     return y, h

@@ -14,12 +14,39 @@ can be evaluated end-to-end on a real model.
 """
 from __future__ import annotations
 
-from repro.numerics import get_format, policy_matmul
+from repro.numerics import (emulated_flash_attention, emulated_ssm_scan,
+                            get_format, policy_matmul)
 
 
 def matmul(x, w, policy=None):
     """x: (..., K) @ w: (K, N) under an optional NumericsPolicy."""
     return policy_matmul(x, w, policy)
+
+
+def policy_flash_attention(q, k, v, policy=None, **kw):
+    """Flash attention under an optional ``NumericsPolicy``.
+
+    Inert policies (or ``policy=None``) run the plain blockwise path
+    (``attention.flash_attention``); emulating policies route through
+    ``repro.numerics.emulated_flash_attention`` with the policy's operand
+    format — per-block rounding/dequant fused into one kernel on TPU.
+    """
+    if policy is None or not getattr(policy, "emulate", False):
+        from repro.models.attention import flash_attention
+        return flash_attention(q, k, v, **kw)
+    return emulated_flash_attention(q, k, v, fmt=policy.fmt, **kw)
+
+
+def policy_ssm_scan(a, b, c, policy=None, **kw):
+    """Selective scan under an optional ``NumericsPolicy``.
+
+    Inert policies keep full-precision operands (``fmt=None`` runs the same
+    fused kernel schedule without rounding); emulating policies round the
+    per-token operands to the policy's format on VMEM entry.
+    """
+    fmt = policy.fmt if (policy is not None
+                         and getattr(policy, "emulate", False)) else None
+    return emulated_ssm_scan(a, b, c, fmt=fmt, **kw)
 
 
 def chip_matmul(x, w, chip_policy, phase: str, fmt=None,

@@ -33,8 +33,9 @@ from repro.numerics.accuracy import (  # noqa: F401
     DEFAULT_ACCURACY_MODEL, AccuracyModel, dot_exact_steps, rne_fraction,
 )
 from repro.numerics.emulate import (  # noqa: F401
-    STYLES, accum_style_for, emulated_dot, emulated_matmul,
-    matmul_for_policy, policy_matmul, quantize_tensor,
+    STYLES, accum_style_for, emulated_dot, emulated_flash_attention,
+    emulated_matmul, emulated_ssm_scan, matmul_for_policy, policy_matmul,
+    quantize_tensor,
 )
 from repro.numerics.registry import (  # noqa: F401
     REGISTRY, FormatRegistry, FormatSpec, fpgen_format, get_format,
@@ -50,6 +51,7 @@ __all__ = [
     "register_format", "fpgen_format", "native_format",
     # emulation
     "STYLES", "accum_style_for", "emulated_matmul", "emulated_dot",
+    "emulated_flash_attention", "emulated_ssm_scan",
     "matmul_for_policy", "policy_matmul", "quantize_tensor",
     "quantize64", "sf_mul", "sf_add", "sf_fma", "sf_cma",
     "dp_mul", "dp_add", "dp_cma", "dp_fma",

@@ -5,11 +5,17 @@ routes through here — ``repro.kernels.ops`` and ``repro.models.numerics`` are
 thin adapters over these entry points and carry no emulation logic of their
 own (enforced by tests/test_numerics.py's import-surface test).
 
-Three granularities, one (format, accumulation-style) vocabulary:
+Granularities, one (format, accumulation-style) vocabulary:
 
-  * ``emulated_matmul`` — the k-block TPU mapping (Pallas kernel on TPU,
-    bitwise-matching pure-jnp reference on CPU, interpret mode for kernel
-    tests);
+  * ``emulated_matmul`` — the k-block TPU mapping (fused Pallas kernel on
+    TPU, bitwise-matching pure-jnp reference on CPU, interpret mode for
+    kernel tests); ``impl='fused'`` is the single-``pallas_call``
+    quantize+matmul+dequant kernel (``kernels/fused.fused_qmm``), the
+    default on TPU;
+  * ``emulated_flash_attention`` / ``emulated_ssm_scan`` — the fused
+    transprecision variants of the model-side kernels (blockwise flash with
+    per-block dequant; operand-quantized selective scan), same impl
+    dispatch;
   * ``emulated_dot`` — the per-scalar hardware semantics
     (``softfloat.dot_fused`` / ``dot_cascade``): what a single FMA/CMA unit
     computes step by step, the oracle granularity;
@@ -54,24 +60,41 @@ def emulated_matmul(
     out_fmt: FloatFormat | None = None,
     bk: int = 128,
     impl: str = "auto",
+    scaled: bool = False,
 ) -> jax.Array:
     """(..., M, K) @ (K, N) with FPMax-emulated numerics.
 
-    impl: 'pallas' | 'interpret' | 'ref' | 'auto'
-      auto -> pallas on TPU, ref on CPU (same numerics, no interpreter cost).
+    impl: 'fused' | 'fused_interpret' | 'pallas' | 'interpret' | 'ref'
+          | 'auto'
+      auto -> fused on TPU (single-pallas_call quantize+matmul+dequant,
+      batched in-kernel), ref on CPU (same numerics, no interpreter cost).
+      'pallas'/'interpret' keep the per-slice fma_emu kernel.
+    ``scaled=True`` enables exact per-tile pow2 scaling with fused dequant
+    (the fp8 dynamic-range mode; 'fused'/'fused_interpret'/'ref' only).
     """
     fmt = get_format(fmt)
     if style not in STYLES:
         raise ValueError(f"style must be one of {STYLES}, got {style!r}")
     if impl == "auto":
-        impl = "pallas" if _on_tpu() else "ref"
-    # the Pallas kernel / its jnp twin are implementation detail, loaded
+        impl = "fused" if _on_tpu() else "ref"
+    # the Pallas kernels / their jnp twins are implementation detail, loaded
     # lazily so the numerics facade never drags the kernels package (or a
     # TPU toolchain) into import time
     from repro.kernels import fma_emu as _fma_emu
+    from repro.kernels import fused as _fused
     from repro.kernels import ref as _ref
 
     batch_shape = a.shape[:-2]
+    if impl in ("fused", "fused_interpret"):
+        a3 = a.reshape((-1,) + a.shape[-2:]) if batch_shape else a
+        out = _fused.fused_qmm(a3, b, fmt=fmt, style=style, out_fmt=out_fmt,
+                               bk=bk, scaled=scaled,
+                               interpret=impl == "fused_interpret")
+        return out.reshape(batch_shape + out.shape[-2:]) if batch_shape \
+            else out
+    if scaled and impl != "ref":
+        raise ValueError(f"scaled=True requires impl 'fused' / "
+                         f"'fused_interpret' / 'ref', got {impl!r}")
     a2 = a.reshape((-1,) + a.shape[-2:]) if batch_shape else a[None]
 
     def one(x):
@@ -83,12 +106,87 @@ def emulated_matmul(
                                            out_fmt=out_fmt, bk=bk,
                                            interpret=True)
         if impl == "ref":
+            if scaled:
+                return _fused.fused_qmm_ref(x, b, fmt=fmt, style=style,
+                                            out_fmt=out_fmt, bk=bk,
+                                            scaled=True)
             return _ref.fma_emu_matmul_ref(x, b, fmt=fmt, style=style,
                                            out_fmt=out_fmt, bk=bk)
         raise ValueError(f"unknown impl {impl!r}")
 
     out = jax.vmap(one)(a2)
     return out.reshape(batch_shape + out.shape[-2:]) if batch_shape else out[0]
+
+
+def emulated_flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    fmt: "FloatFormat | str | None",
+    impl: str = "auto",
+    scaled: bool = True,
+    **kw,
+) -> jax.Array:
+    """Blockwise flash attention under FPMax-emulated numerics.
+
+    q: (B, Sq, Hq, D); k, v: (B, Sk, Hkv, D).  Per-block quantization of
+    q/k/v (and the probability operand) with per-block dequant of each
+    partial dot — the fp8/bf16 variant of ``models/flash_vjp``'s forward
+    schedule, fused in one ``pallas_call`` on TPU.  ``fmt=None`` runs the
+    same schedule without rounding.
+
+    impl: 'fused' (Pallas) | 'interpret' | 'ref' (bitwise loop twin) |
+    'scan' (fast jnp twin, the CPU serving path) | 'auto' (fused on TPU,
+    scan on CPU).
+    """
+    fmt = get_format(fmt) if fmt is not None else None
+    if impl == "auto":
+        impl = "fused" if _on_tpu() else "scan"
+    from repro.kernels import fused as _fused
+    if impl == "fused":
+        return _fused.fused_flash_attention(q, k, v, fmt=fmt, scaled=scaled,
+                                            **kw)
+    if impl == "interpret":
+        return _fused.fused_flash_attention(q, k, v, fmt=fmt, scaled=scaled,
+                                            interpret=True, **kw)
+    if impl == "ref":
+        return _fused.fused_flash_ref(q, k, v, fmt=fmt, scaled=scaled, **kw)
+    if impl == "scan":
+        return _fused.fused_flash_scan(q, k, v, fmt=fmt, scaled=scaled, **kw)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def emulated_ssm_scan(
+    a: jax.Array,
+    b: jax.Array,
+    c: jax.Array,
+    *,
+    fmt: "FloatFormat | str | None",
+    impl: str = "auto",
+    **kw,
+):
+    """Selective scan (Mamba recurrence) with format-rounded operands.
+
+    a, b: (B, S, D, N); c: (B, S, N) -> (y, h_last).  Operands pass through
+    ``fmt``'s rounding on VMEM entry; the recurrence state stays in the f32
+    extended accumulator.  impl: 'fused' | 'interpret' | 'ref' | 'auto'
+    (fused on TPU, ref on CPU — the rounding is elementwise, so the ref is
+    bitwise at any tiling).
+    """
+    fmt = get_format(fmt) if fmt is not None else None
+    if impl == "auto":
+        impl = "fused" if _on_tpu() else "ref"
+    from repro.kernels import fused as _fused
+    if impl == "fused":
+        return _fused.ssm_scan_quantized(a, b, c, fmt=fmt, **kw)
+    if impl == "interpret":
+        return _fused.ssm_scan_quantized(a, b, c, fmt=fmt, interpret=True,
+                                         **kw)
+    if impl == "ref":
+        kw.pop("chunk", None), kw.pop("bd", None)
+        return _fused.ssm_scan_quantized_ref(a, b, c, fmt=fmt, **kw)
+    raise ValueError(f"unknown impl {impl!r}")
 
 
 def emulated_dot(a_vec, b_vec, *, fmt: FloatFormat | str,

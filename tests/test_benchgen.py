@@ -1,0 +1,134 @@
+"""repro.benchgen: spec validation, the analytic model, and validate()."""
+import math
+
+import pytest
+
+from repro.benchgen import (KernelSpec, MachineModel, build, calibrate,
+                            default_specs, make_inputs, op_counts,
+                            paper_machine, predict, validate)
+from repro.roofline.analysis import RooflineReport
+
+
+# ---------------------------------------------------------------------------
+# KernelSpec
+# ---------------------------------------------------------------------------
+def test_spec_validation_rejects_bad_points():
+    with pytest.raises(ValueError, match="op must be"):
+        KernelSpec("conv", "bf16", (8, 8, 8))
+    with pytest.raises(ValueError, match="shape is"):
+        KernelSpec("qmm", "bf16", (8, 8))
+    with pytest.raises(ValueError, match="accum_style"):
+        KernelSpec("qmm", "bf16", (8, 8, 8), "sloppy")
+    with pytest.raises(KeyError, match="unknown format"):
+        KernelSpec("qmm", "fp13", (8, 8, 8))
+
+
+def test_spec_name_carries_the_point():
+    s = KernelSpec("qmm", "fp8_e4m3", (64, 128, 32), "cascade", scaled=True)
+    assert s.name == "qmm.fp8_e4m3.64x128x32.cascade.scaled"
+    assert s.as_dict()["shape"] == [64, 128, 32]
+    # non-qmm names omit the (irrelevant) accumulation style
+    assert KernelSpec("flash", "bf16", (1, 2, 64, 16)).name == \
+        "flash.bf16.1x2x64x16"
+
+
+# ---------------------------------------------------------------------------
+# op_counts: the analytic schedule model
+# ---------------------------------------------------------------------------
+def test_qmm_counts_track_style_and_scaling():
+    shape = (256, 256, 256)
+    fused_c = op_counts(KernelSpec("qmm", "bf16", shape, "fused"))
+    casc_c = op_counts(KernelSpec("qmm", "bf16", shape, "cascade"))
+    fwd_c = op_counts(KernelSpec("qmm", "bf16", shape, "cascade_fwd"))
+    assert fused_c["dot_flops"] == 2 * 256 ** 3
+    assert fused_c["quant_elems"] == 2 * 256 * 256  # operands, once each
+    # cascade rounds the partial twice per k-block, cascade_fwd once
+    assert casc_c["quant_elems"] > fwd_c["quant_elems"] > \
+        fused_c["quant_elems"]
+    scaled_c = op_counts(KernelSpec("qmm", "bf16", shape, "fused",
+                                    scaled=True))
+    assert scaled_c["quant_elems"] == 2 * fused_c["quant_elems"]
+
+
+def test_flash_counts_carry_the_blockwise_requant():
+    c = op_counts(KernelSpec("flash", "bf16", (1, 2, 256, 64)))
+    assert c["dot_flops"] == 4 * 2 * 256 * 256 * 64
+    assert c["exp_elems"] == 2 * 256 * 256
+    # per-pair q/k/v requant: 2 q-blocks x 2 kv-blocks per head
+    assert c["quant_elems"] > 0 and c["hbm_bytes"] > 0
+
+
+def test_ssm_and_quantize_counts():
+    c = op_counts(KernelSpec("ssm_scan", "fp8_e4m3", (1, 128, 256, 16)))
+    assert c["vpu_flops"] == 4 * 128 * 256 * 16
+    assert c["dot_flops"] == 0
+    q = op_counts(KernelSpec("quantize", "bf16", (512, 512)))
+    assert q["quant_elems"] == 512 * 512
+    assert q["hbm_bytes"] == 8 * 512 * 512
+
+
+# ---------------------------------------------------------------------------
+# machine model + predict
+# ---------------------------------------------------------------------------
+def test_paper_machine_is_positive_and_ordered():
+    m = paper_machine()
+    assert m.mxu_flops > m.vpu_flops > m.quant_rate > 0
+    assert m.hbm_bw > 0
+    assert set(m.as_dict()) == {"name", "mxu_flops", "vpu_flops",
+                                "quant_rate", "exp_rate", "hbm_bw"}
+
+
+def test_predict_returns_roofline_report_with_summed_pipe_bound():
+    m = paper_machine()
+    spec = KernelSpec("qmm", "bf16", (256, 256, 256))
+    rep = predict(spec, m)
+    assert isinstance(rep, RooflineReport)
+    c = op_counts(spec)
+    expect = (c["dot_flops"] / m.mxu_flops
+              + c["quant_elems"] / m.quant_rate
+              + c["vpu_flops"] / m.vpu_flops)
+    assert math.isclose(rep.t_compute, expect, rel_tol=1e-9)
+    assert rep.step_time_bound_s >= rep.t_compute > 0
+    assert rep.bottleneck in ("compute", "memory", "collective")
+    assert rep.chips == 1 and rep.t_collective == 0.0
+
+
+def test_predict_memory_bound_when_bandwidth_starves():
+    starved = MachineModel(name="starved", mxu_flops=1e15, vpu_flops=1e15,
+                           quant_rate=1e15, exp_rate=1e15, hbm_bw=1e3)
+    rep = predict(KernelSpec("quantize", "bf16", (512, 512)), starved)
+    assert rep.bottleneck == "memory"
+
+
+# ---------------------------------------------------------------------------
+# build + validate (tiny live measurement)
+# ---------------------------------------------------------------------------
+def test_build_runs_every_op():
+    for spec in (KernelSpec("qmm", "bf16", (16, 32, 16)),
+                 KernelSpec("flash", "bf16", (1, 2, 32, 8)),
+                 KernelSpec("ssm_scan", "bf16", (1, 16, 8, 4)),
+                 KernelSpec("quantize", "bf16", (16, 128))):
+        fn = build(spec, impl="ref")
+        out = fn(*make_inputs(spec))
+        assert out.shape, spec.name
+
+
+def test_default_specs_cover_every_op_and_the_fp8_tiers():
+    specs = default_specs()
+    assert {s.op for s in specs} == {"qmm", "flash", "ssm_scan", "quantize"}
+    assert any(s.fmt.startswith("fp8") for s in specs)
+    assert any(s.scaled for s in specs)
+    assert len({s.name for s in specs}) == len(specs)
+
+
+def test_validate_smoke():
+    machine = calibrate(n=1)
+    out = validate([KernelSpec("quantize", "bf16", (256, 256)),
+                    KernelSpec("qmm", "bf16", (64, 64, 64))],
+                   machine, n=2)
+    assert out["summary"]["n_specs"] == 2
+    assert 0.0 <= out["summary"]["frac_within_tol"] <= 1.0
+    for row in out["rows"]:
+        assert row["t_pred_s"] > 0 and row["t_meas_s"] > 0
+        assert row["ratio"] == pytest.approx(
+            row["t_meas_s"] / row["t_pred_s"], rel=1e-6)

@@ -1,0 +1,254 @@
+"""Bitwise parity of the fused transprecision kernels (interpret mode).
+
+The contract under test: every fused kernel (quantize+matmul+dequant flash
+attention, quantized selective scan) is *bitwise* identical, compiled
+program vs compiled program, to its jnp ref twin — across the whole format
+registry including the fp8 tiers — and the ``impl='auto'`` dispatch in
+``repro.numerics.emulate`` routes to the fused kernels exactly when a TPU
+backend is attached.  No hypothesis import: this module is part of the fast
+interpret-mode kernel lane.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.formats import BF16, FP8_E4M3, FP32
+from repro.kernels import fused
+from repro.kernels.ref import fma_emu_matmul_ref, quantize_ref
+from repro.numerics import (emulated_flash_attention, emulated_matmul,
+                            emulated_ssm_scan, quantize_tensor)
+from repro.numerics.registry import REGISTRY
+
+# fp64 needs a wider-than-f32 quantizer; every other registered format is
+# hostable on the f32 Pallas datapath
+FORMATS = [s.fmt for s in REGISTRY if s.name != "fp64"]
+FORMAT_IDS = [s.name for s in REGISTRY if s.name != "fp64"]
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def assert_bitwise(a, b, msg=""):
+    a, b = np.asarray(jax.device_get(a)), np.asarray(jax.device_get(b))
+    assert a.shape == b.shape, f"{msg}: shape {a.shape} vs {b.shape}"
+    mism = a.view(np.uint32) != b.view(np.uint32)
+    assert not mism.any(), (
+        f"{msg}: {mism.sum()}/{mism.size} words differ; "
+        f"max abs diff {np.abs(a - b).max()}")
+
+
+# ---------------------------------------------------------------------------
+# quantize_nd / fma_emu interpret kernels vs the numerics ref — all formats
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fmt", FORMATS, ids=FORMAT_IDS)
+def test_quantize_nd_interpret_matches_ref_all_formats(fmt):
+    x = jnp.asarray(_rng(1).standard_normal((24, 136)) * 40.0, jnp.float32)
+    got = quantize_tensor(x, fmt=fmt, impl="interpret")
+    want = jax.jit(lambda t: quantize_ref(t, fmt=fmt))(x)
+    assert_bitwise(got, want, f"quantize_nd {fmt.name}")
+
+
+@pytest.mark.parametrize("fmt", FORMATS, ids=FORMAT_IDS)
+def test_fma_emu_interpret_matches_ref_all_formats(fmt):
+    r = _rng(2)
+    a = jnp.asarray(r.standard_normal((24, 40)), jnp.float32)
+    b = jnp.asarray(r.standard_normal((40, 16)), jnp.float32)
+    got = emulated_matmul(a, b, fmt=fmt, impl="interpret", bk=16)
+    want = jax.jit(lambda a_, b_: fma_emu_matmul_ref(
+        a_, b_, fmt=fmt, bk=16))(a, b)
+    assert_bitwise(got, want, f"fma_emu {fmt.name}")
+
+
+# ---------------------------------------------------------------------------
+# fused_qmm: kernel (interpret) vs jnp twin, all formats / styles / scaled
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fmt", FORMATS, ids=FORMAT_IDS)
+def test_fused_qmm_bitwise_all_formats(fmt):
+    r = _rng(3)
+    a = jnp.asarray(r.standard_normal((2, 24, 40)), jnp.float32)
+    b = jnp.asarray(r.standard_normal((40, 16)), jnp.float32)
+    got = fused.fused_qmm(a, b, fmt=fmt, bm=16, bn=16, bk=16,
+                          interpret=True)
+    want = fused.fused_qmm_ref(a, b, fmt=fmt, bk=16)
+    assert_bitwise(got, want, f"fused_qmm {fmt.name}")
+
+
+@pytest.mark.parametrize("style", ("fused", "cascade", "cascade_fwd"))
+@pytest.mark.parametrize("scaled", (False, True), ids=("plain", "scaled"))
+def test_fused_qmm_styles_scaled_bitwise(style, scaled):
+    r = _rng(4)
+    a = jnp.asarray(r.standard_normal((24, 40)) * 64.0, jnp.float32)
+    b = jnp.asarray(r.standard_normal((40, 16)) * 64.0, jnp.float32)
+    got = fused.fused_qmm(a, b, fmt=FP8_E4M3, style=style, scaled=scaled,
+                          bm=16, bn=16, bk=16, interpret=True)
+    want = fused.fused_qmm_ref(a, b, fmt=FP8_E4M3, style=style,
+                               scaled=scaled, bk=16)
+    assert_bitwise(got, want, f"fused_qmm {style} scaled={scaled}")
+
+
+def test_fused_qmm_matches_legacy_kblock_ref():
+    """Unscaled fused_qmm is the existing kernels/ref.py semantics."""
+    r = _rng(5)
+    a = jnp.asarray(r.standard_normal((24, 40)), jnp.float32)
+    b = jnp.asarray(r.standard_normal((40, 16)), jnp.float32)
+    got = fused.fused_qmm_ref(a, b, fmt=BF16, bk=16)
+    want = jax.jit(lambda a_, b_: fma_emu_matmul_ref(
+        a_, b_, fmt=BF16, bk=16))(a, b)
+    assert_bitwise(got, want, "fused_qmm vs legacy k-block ref")
+
+
+def test_scaled_mode_rescues_fp8_overflow_and_is_exact_for_fp32():
+    r = _rng(6)
+    big = jnp.asarray(r.standard_normal((16, 32)) * 1e6, jnp.float32)
+    w = jnp.asarray(r.standard_normal((32, 16)) * 1e6, jnp.float32)
+    plain = fused.fused_qmm_ref(big, w, fmt=FP8_E4M3)
+    scaled = fused.fused_qmm_ref(big, w, fmt=FP8_E4M3, scaled=True)
+    assert not bool(jnp.isfinite(plain).all()), "fp8 plain should overflow"
+    assert bool(jnp.isfinite(scaled).all()), "pow2 scaling must rescue fp8"
+    # scaling is exact pow2: when the format already covers the range it is
+    # the identity transform
+    a = jnp.asarray(r.standard_normal((16, 32)), jnp.float32)
+    b = jnp.asarray(r.standard_normal((32, 16)), jnp.float32)
+    assert_bitwise(fused.fused_qmm_ref(a, b, fmt=FP32, scaled=True),
+                   fused.fused_qmm_ref(a, b, fmt=FP32),
+                   "fp32 scaled vs plain")
+
+
+# ---------------------------------------------------------------------------
+# fused flash attention: kernel vs loop twin (bitwise), scan twin (close)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fmt", (None, BF16, FP8_E4M3),
+                         ids=("native", "bf16", "fp8_e4m3"))
+def test_fused_flash_bitwise(fmt):
+    r = _rng(7)
+    q = jnp.asarray(r.standard_normal((2, 48, 4, 16)), jnp.float32)
+    k = jnp.asarray(r.standard_normal((2, 48, 2, 16)), jnp.float32)
+    v = jnp.asarray(r.standard_normal((2, 48, 2, 16)), jnp.float32)
+    got = fused.fused_flash_attention(q, k, v, fmt=fmt, block_q=16,
+                                      block_k=16, interpret=True)
+    want = fused.fused_flash_ref(q, k, v, fmt=fmt, block_q=16, block_k=16)
+    assert_bitwise(got, want, f"flash fmt={getattr(fmt, 'name', None)}")
+
+
+def test_fused_flash_scan_twin_close():
+    r = _rng(8)
+    q = jnp.asarray(r.standard_normal((1, 64, 4, 16)), jnp.float32)
+    k = jnp.asarray(r.standard_normal((1, 64, 2, 16)), jnp.float32)
+    v = jnp.asarray(r.standard_normal((1, 64, 2, 16)), jnp.float32)
+    fast = fused.fused_flash_scan(q, k, v, fmt=BF16, block_q=16, block_k=16)
+    slow = fused.fused_flash_ref(q, k, v, fmt=BF16, block_q=16, block_k=16)
+    np.testing.assert_allclose(np.asarray(fast), np.asarray(slow),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_fused_flash_windowed_masking():
+    """window>0 must zero out attention beyond the band, like models/."""
+    r = _rng(9)
+    q = jnp.asarray(r.standard_normal((1, 32, 2, 8)), jnp.float32)
+    k = jnp.asarray(r.standard_normal((1, 32, 2, 8)), jnp.float32)
+    v = jnp.asarray(r.standard_normal((1, 32, 2, 8)), jnp.float32)
+    got = fused.fused_flash_attention(q, k, v, fmt=None, window=8,
+                                      block_q=16, block_k=16, interpret=True)
+    want = fused.fused_flash_ref(q, k, v, fmt=None, window=8,
+                                 block_q=16, block_k=16)
+    assert_bitwise(got, want, "flash windowed")
+
+
+# ---------------------------------------------------------------------------
+# quantized selective scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fmt", (None, BF16, FP8_E4M3),
+                         ids=("native", "bf16", "fp8_e4m3"))
+def test_ssm_scan_quantized_bitwise(fmt):
+    r = _rng(10)
+    a = jnp.asarray(r.uniform(0.05, 0.95, (2, 32, 16, 8)), jnp.float32)
+    b = jnp.asarray(r.standard_normal((2, 32, 16, 8)), jnp.float32)
+    c = jnp.asarray(r.standard_normal((2, 32, 8)), jnp.float32)
+    y_k, h_k = fused.ssm_scan_quantized(a, b, c, fmt=fmt, chunk=16, bd=16,
+                                        interpret=True)
+    y_r, h_r = fused.ssm_scan_quantized_ref(a, b, c, fmt=fmt)
+    assert_bitwise(y_k, y_r, f"ssm y fmt={getattr(fmt, 'name', None)}")
+    assert_bitwise(h_k, h_r, f"ssm h fmt={getattr(fmt, 'name', None)}")
+
+
+# ---------------------------------------------------------------------------
+# dispatch: impl='auto' routes through the fused kernels iff on TPU
+# ---------------------------------------------------------------------------
+def test_auto_dispatch_cpu_uses_ref(monkeypatch):
+    import repro.numerics.emulate as emulate
+    monkeypatch.setattr(emulate, "_on_tpu", lambda: False)
+    r = _rng(11)
+    a = jnp.asarray(r.standard_normal((8, 16)), jnp.float32)
+    b = jnp.asarray(r.standard_normal((16, 8)), jnp.float32)
+    got = emulated_matmul(a, b, fmt=BF16, impl="auto")
+    want = emulated_matmul(a, b, fmt=BF16, impl="ref")
+    assert_bitwise(got, want, "auto==ref off-TPU")
+
+
+def test_auto_dispatch_tpu_routes_to_fused_kernels(monkeypatch):
+    import repro.kernels.fused as fused_mod
+    import repro.numerics.emulate as emulate
+    monkeypatch.setattr(emulate, "_on_tpu", lambda: True)
+    calls = []
+    sentinel = jnp.zeros((8, 8), jnp.float32)
+
+    monkeypatch.setattr(fused_mod, "fused_qmm",
+                        lambda *a, **kw: calls.append("qmm") or sentinel)
+    monkeypatch.setattr(fused_mod, "fused_flash_attention",
+                        lambda *a, **kw: calls.append("flash") or sentinel)
+    monkeypatch.setattr(fused_mod, "ssm_scan_quantized",
+                        lambda *a, **kw: calls.append("ssm") or
+                        (sentinel, sentinel))
+
+    r = _rng(12)
+    a = jnp.asarray(r.standard_normal((8, 16)), jnp.float32)
+    b = jnp.asarray(r.standard_normal((16, 8)), jnp.float32)
+    emulated_matmul(a, b, fmt=BF16, impl="auto")
+    q = jnp.asarray(r.standard_normal((1, 8, 2, 4)), jnp.float32)
+    emulated_flash_attention(q, q, q, fmt=BF16, impl="auto")
+    sa = jnp.asarray(r.uniform(0.1, 0.9, (1, 8, 4, 2)), jnp.float32)
+    sc = jnp.asarray(r.standard_normal((1, 8, 2)), jnp.float32)
+    emulated_ssm_scan(sa, sa, sc, fmt=BF16, impl="auto")
+    assert calls == ["qmm", "flash", "ssm"]
+
+
+# ---------------------------------------------------------------------------
+# policy adapters: serve/models pick the fused path up transparently
+# ---------------------------------------------------------------------------
+def test_policy_flash_attention_inert_and_emulating():
+    from repro.models.numerics import EmulatedPolicy, policy_flash_attention
+
+    r = _rng(13)
+    q = jnp.asarray(r.standard_normal((1, 32, 2, 8)), jnp.float32)
+    k = jnp.asarray(r.standard_normal((1, 32, 2, 8)), jnp.float32)
+    v = jnp.asarray(r.standard_normal((1, 32, 2, 8)), jnp.float32)
+
+    inert = policy_flash_attention(q, k, v, policy=None)
+    from repro.models.attention import flash_attention
+    np.testing.assert_array_equal(np.asarray(inert),
+                                  np.asarray(flash_attention(q, k, v)))
+
+    pol = EmulatedPolicy(BF16, "fused")
+    emul = policy_flash_attention(q, k, v, policy=pol)
+    want = emulated_flash_attention(q, k, v, fmt=BF16)
+    assert_bitwise(emul, want, "policy flash emulating")
+
+
+def test_policy_ssm_scan_inert_and_emulating():
+    from repro.models.numerics import EmulatedPolicy, policy_ssm_scan
+
+    r = _rng(14)
+    a = jnp.asarray(r.uniform(0.05, 0.95, (1, 16, 8, 4)), jnp.float32)
+    b = jnp.asarray(r.standard_normal((1, 16, 8, 4)), jnp.float32)
+    c = jnp.asarray(r.standard_normal((1, 16, 4)), jnp.float32)
+
+    y0, _ = policy_ssm_scan(a, b, c, policy=None)
+    y_native, _ = fused.ssm_scan_quantized_ref(a, b, c, fmt=None)
+    assert_bitwise(y0, y_native, "policy ssm inert")
+
+    pol = EmulatedPolicy(FP8_E4M3, "fused")
+    y1, _ = policy_ssm_scan(a, b, c, policy=pol)
+    y_want, _ = fused.ssm_scan_quantized_ref(a, b, c, fmt=FP8_E4M3)
+    assert_bitwise(y1, y_want, "policy ssm emulating")
