@@ -39,6 +39,7 @@ ARCH = "tinyllama-1.1b"
 SLOTS = 4           # per die
 MAX_LEN = 64
 DISPATCH_TOKENS = 4
+PREFILL_CHUNK = 16  # continuous batching on every die replica
 TICK_S = 0.05       # simulated seconds per engine step
 HORIZON_S = 20.0
 BASE_RATE_RPS = 0.9
@@ -82,10 +83,15 @@ def make_cluster() -> ClusterSpec:
 
 
 def make_router(model, params, clock):
+    # prefill_chunk rides through **server_kw to every die replica; at this
+    # trace's prompt lengths (4-10 tokens) every prompt is a single chunk,
+    # so the latency/energy trajectory is identical to monolithic admission
+    # while exercising the continuous-batching scheduler cluster-wide
     return ClusterRouter(model, params, make_cluster(), slots=SLOTS,
                          max_len=MAX_LEN, clock=clock,
                          accuracy_fleets=(5e-2, 1e-7),
-                         dispatch_tokens=DISPATCH_TOKENS)
+                         dispatch_tokens=DISPATCH_TOKENS,
+                         prefill_chunk=PREFILL_CHUNK)
 
 
 def check_bitwise(tag, trace, finished, refs):
@@ -119,14 +125,19 @@ def run():
     rep = replay(router, trace, clock, tick_s=TICK_S,
                  dispatch_tokens=DISPATCH_TOKENS)
     completed_frac = check_bitwise("steady", trace, rep["finished"], refs)
-    st = latency_stats(rep["latency_s"])
+    st = latency_stats(rep["latency_s"], rep["ttft_s"])
     energy = router.energy_report()
     util = router.utilization_report()
     e_per_req = energy["total_j"] / len(trace)
+    # cluster-wide decode-stall fraction: pool the per-die counters
+    sp = sum(s._stall_prefill_tokens for s in router.servers.values())
+    cd = sum(s._contended_decode_tokens for s in router.servers.values())
+    stall = sp / max(sp + cd, 1)
     assert completed_frac == 1.0
     assert not router.rejected and not router._parked
     emit("cluster_bench.steady", st["p99_s"] * 1e6,
          f"p50={st['p50_s']:.3f}s;p99={st['p99_s']:.3f}s;"
+         f"p99_ttft={st['p99_ttft_s']:.3f}s;stall={stall:.3f};"
          f"e_per_req={e_per_req:.3e}J;"
          f"util_eco={util['eco']:.3f};util_gold={util['gold']:.3f}")
 
@@ -174,6 +185,10 @@ def run():
         outputs_identical=True,
         p50_latency_s=st["p50_s"],
         p99_latency_s=st["p99_s"],
+        p50_ttft_s=st["p50_ttft_s"],
+        p99_ttft_s=st["p99_ttft_s"],
+        decode_stall_frac=stall,
+        prefill_chunk=PREFILL_CHUNK,
         energy_per_request_j=e_per_req,
         utilization={k: round(v, 4) for k, v in util.items()},
         kill_requests_migrated=migrated,

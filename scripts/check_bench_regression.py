@@ -36,7 +36,13 @@ GUARDS = {
     "dse_bench.json": (("speedup_warm", "higher"),),   # legacy / warm sweep
     "autotune_bench.json": (("speedup_warm", "higher"),),  # cold / warm tune
     "chip_bench.json": (("speedup_warm", "higher"),),  # cold / warm chip tune
-    "serve_bench.json": (("speedup_warm", "higher"),),  # per-token / fused
+    # per-token / fused warm ratio, plus the chunked-prefill tail metrics
+    # from the long-prompt-storm scenario: p99 time-to-first-token of the
+    # interactive class and the fraction of contended-step work spent on
+    # prefill (both deterministic, machine-independent)
+    "serve_bench.json": (("speedup_warm", "higher"),
+                         ("p99_ttft_s", "lower"),
+                         ("decode_stall_frac", "lower")),
     "numerics_bench.json": (("speedup_warm", "higher"),),  # SLO tune warm
     # chaos harness: fraction of requests completed under injected faults
     # (the bench hard-asserts zero loss before appending; this guards the
@@ -47,7 +53,9 @@ GUARDS = {
     # machine-independent and guarded directly
     "cluster_bench.json": (("p99_latency_s", "lower"),
                            ("energy_per_request_j", "lower"),
-                           ("completed_frac", "higher")),
+                           ("completed_frac", "higher"),
+                           ("p99_ttft_s", "lower"),
+                           ("decode_stall_frac", "lower")),
     # fused transprecision kernel path: warm cost relative to the same-run
     # native matmul (runner speed cancels out of the ratio)
     "kernel_bench.json": (("overhead_fused_vs_native", "lower"),),

@@ -10,14 +10,16 @@ front-end.
   * ``ChipClass`` / ``tune_cluster`` — chip-mix + fleet-size co-design
     under total area/TDP budgets.
 """
-from repro.cluster.loadgen import (Arrival, RequestClass, TraceConfig,
-                                   generate, latency_stats, replay)
+from repro.cluster.loadgen import (Arrival, RequestClass, StepCost,
+                                   TraceConfig, generate, latency_stats,
+                                   replay)
 from repro.cluster.router import ClusterRouter, SimClock
 from repro.cluster.spec import ClusterSpec, homogeneous
 from repro.cluster.tune import ChipClass, ClusterTuneResult, tune_cluster
 
 __all__ = [
     "Arrival", "ChipClass", "ClusterRouter", "ClusterSpec",
-    "ClusterTuneResult", "RequestClass", "SimClock", "TraceConfig",
-    "generate", "homogeneous", "latency_stats", "replay", "tune_cluster",
+    "ClusterTuneResult", "RequestClass", "SimClock", "StepCost",
+    "TraceConfig", "generate", "homogeneous", "latency_stats", "replay",
+    "tune_cluster",
 ]

@@ -135,10 +135,40 @@ def generate(cfg: TraceConfig, vocab_size: int, *,
     return out
 
 
+@dataclasses.dataclass(frozen=True)
+class StepCost:
+    """Deterministic token-work clock model for ``replay``: after each
+    scheduler step the simulated clock advances by the work the step
+    actually performed (prefill tokens processed x ``t_prefill_token_s``
+    plus decode tokens emitted x ``t_decode_token_s``), read off the
+    target's cumulative counters.  This is what makes admission-latency
+    effects *visible* in simulated time — a monolithic 4k-token prefill
+    step costs 4k prefill-token units while every decode lane waits,
+    whereas a chunked step costs one chunk.  Pure function of the trace
+    and the schedule: no wall-clock noise."""
+
+    t_prefill_token_s: float = 0.0
+    t_decode_token_s: float = 0.0
+
+
+def _work(target) -> Tuple[int, int]:
+    """Cumulative (prefill_tokens, tokens_decoded) across the target's
+    engines (a bare server, or anything exposing ``servers``)."""
+    servers = getattr(target, "servers", None)
+    if servers is None:
+        servers = [target]
+    elif hasattr(servers, "values"):
+        servers = list(servers.values())
+    pf = sum(getattr(s, "prefill_tokens", 0) for s in servers)
+    dec = sum(getattr(s, "tokens_decoded", 0) for s in servers)
+    return pf, dec
+
+
 def replay(target, arrivals: Sequence[Arrival], clock, *,
            tick_s: float, dispatch_tokens: Optional[int] = None,
            max_steps: int = 100_000,
-           carryover: Optional[Dict[int, float]] = None
+           carryover: Optional[Dict[int, float]] = None,
+           cost: Optional[StepCost] = None
            ) -> Dict[str, object]:
     """Open-loop replay of a trace against a server or ``ClusterRouter``.
 
@@ -147,17 +177,26 @@ def replay(target, arrivals: Sequence[Arrival], clock, *,
     every arrival whose time has come, and steps the target — arrivals
     never wait for capacity (that is the point).  Returns per-request
     latency records (completion time - arrival time, finished requests
-    only), the finished/rejected/expired partition, and the trace span.
+    only), per-request TTFT records (first-token commit time - arrival
+    time, end-of-step semantics), the finished/rejected/expired partition,
+    and the trace span.
 
     ``carryover`` maps uid -> original arrival time for requests already
     in flight on the target from an earlier replay window (e.g. traffic
     that survived a mid-trace die failure), so their latency is charged
     from their true arrival.
+
+    ``cost`` (a ``StepCost``) additionally advances the clock after each
+    step by that step's measured token work, making scheduling-induced
+    queueing delay observable in simulated time; ``cost=None`` is the
+    plain fixed-tick replay, unchanged.
     """
     pending = sorted(arrivals, key=lambda a: a.at_s)
     submit_t = dict(carryover or {})
     submit_t.update({a.request.uid: a.at_s for a in pending})
     latency: Dict[int, float] = {}
+    ttft: Dict[int, float] = {}
+    watch: Dict[int, Request] = {}  # submitted, first token not yet seen
     classes = {a.request.uid: a.cls for a in pending}
     finished = []
     rejected = []
@@ -167,12 +206,25 @@ def replay(target, arrivals: Sequence[Arrival], clock, *,
         while i < len(pending) and pending[i].at_s <= clock.t:
             try:
                 target.submit(pending[i].request)
+                watch[pending[i].request.uid] = pending[i].request
             except RequestRejected:
                 rejected.append(pending[i].request)
             i += 1
+        if cost is not None:
+            p0, d0 = _work(target)
         target.step(dispatch_tokens)
+        if cost is not None:
+            p1, d1 = _work(target)
+            clock.t += cost.t_prefill_token_s * (p1 - p0) \
+                + cost.t_decode_token_s * (d1 - d0)
+        for uid in [u for u, r in watch.items() if r.output]:
+            t0 = submit_t.get(uid)
+            if t0 is not None:
+                ttft[uid] = clock.t - t0
+            del watch[uid]
         for req in _drain_finished(target):
             finished.append(req)
+            watch.pop(req.uid, None)
             t0 = submit_t.get(req.uid)
             if t0 is not None:
                 latency[req.uid] = clock.t - t0
@@ -181,6 +233,7 @@ def replay(target, arrivals: Sequence[Arrival], clock, *,
     expired = [r for r in finished if r.expired]
     return dict(finished=finished, rejected=rejected, expired=expired,
                 latency_s={u: latency[u] for u in sorted(latency)},
+                ttft_s={u: ttft[u] for u in sorted(ttft)},
                 classes=classes, span_s=clock.t,
                 submitted=len(pending) - len(rejected))
 
@@ -192,13 +245,32 @@ def _drain_finished(target) -> List[Request]:
     return out
 
 
-def latency_stats(latency_s: Dict[int, float]) -> Dict[str, float]:
-    """p50/p99/mean over a replay's latency records."""
+def latency_stats(latency_s: Dict[int, float],
+                  ttft_s: Optional[Dict[int, float]] = None
+                  ) -> Dict[str, float]:
+    """p50/p99/mean over a replay's end-to-end latency records; pass the
+    replay's ``ttft_s`` records too and time-to-first-token percentiles
+    are reported separately (admission latency is a different SLO than
+    completion latency — a chunked-prefill engine improves the former
+    without touching the latter)."""
     if not latency_s:
-        return dict(n=0, p50_s=0.0, p99_s=0.0, mean_s=0.0, max_s=0.0)
-    v = np.asarray(sorted(latency_s.values()))
-    return dict(n=int(v.size),
-                p50_s=float(np.percentile(v, 50)),
-                p99_s=float(np.percentile(v, 99)),
-                mean_s=float(v.mean()),
-                max_s=float(v.max()))
+        out = dict(n=0, p50_s=0.0, p99_s=0.0, mean_s=0.0, max_s=0.0)
+    else:
+        v = np.asarray(sorted(latency_s.values()))
+        out = dict(n=int(v.size),
+                   p50_s=float(np.percentile(v, 50)),
+                   p99_s=float(np.percentile(v, 99)),
+                   mean_s=float(v.mean()),
+                   max_s=float(v.max()))
+    if ttft_s is not None:
+        if not ttft_s:
+            out.update(n_ttft=0, p50_ttft_s=0.0, p99_ttft_s=0.0,
+                       mean_ttft_s=0.0, max_ttft_s=0.0)
+        else:
+            w = np.asarray(sorted(ttft_s.values()))
+            out.update(n_ttft=int(w.size),
+                       p50_ttft_s=float(np.percentile(w, 50)),
+                       p99_ttft_s=float(np.percentile(w, 99)),
+                       mean_ttft_s=float(w.mean()),
+                       max_ttft_s=float(w.max()))
+    return out

@@ -57,6 +57,10 @@ class ArchConfig:
     ssm_expand: int = 2
     ssm_head_dim: int = 64  # mamba2 head dim
     ssm_version: int = 0  # 1 = mamba1, 2 = mamba2
+    #: internal selective-scan chunk (lax.scan carry points).  Chunked
+    #: serving prefill is bitwise-exact only when its chunk boundaries land
+    #: on multiples of this, so the engine rounds its prefill chunk to it.
+    ssm_scan_chunk: int = 64
     # --- hybrid (zamba2) ---
     shared_attn_every: int = 0  # apply the shared attention block every N
     # --- attention flavor ---

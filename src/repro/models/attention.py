@@ -124,6 +124,44 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     return out.astype(q.dtype)
 
 
+def chunk_attention(q, k, v, q_pos, k_pos, k_valid, *, window: int = 0):
+    """Chunked-prefill attention: one online-softmax block with *per-lane*
+    position/validity masks (``flash_attention`` only supports scalar
+    ``q_offset``/``kv_len``; a mixed batch of prefill chunks needs one
+    offset per lane).
+
+    q: (B,Sq,Hq,D) chunk queries; k,v: (B,Sk,Hkv,D) gathered history +
+    fresh chunk keys (compute dtype); q_pos: (B,Sq) / k_pos: (B,Sk)
+    absolute positions per lane; k_valid: (B,Sk) marks real (non-pad,
+    in-range) keys.  Single KV block: bitwise-identical to the
+    ``flash_attention`` single-block trace for every valid query row —
+    masked pad columns contribute exact zeros to the row sums, which are
+    additive identities, so differing pad counts cannot perturb the valid
+    rows (the same argument that makes bucket-padded prefill exact).
+    """
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    mask = k_valid[:, None, :] & (k_pos[:, None, :] <= q_pos[:, :, None])
+    if window:
+        mask = mask & (k_pos[:, None, :] > q_pos[:, :, None] - window)
+    mask = mask[:, None, None]  # (B,1,1,Sq,Sk)
+    s_for_max = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s_for_max, axis=-1)
+    m_safe = jnp.where(m <= NEG_INF / 2, 0.0, m)
+    p = jnp.exp(s - m_safe[..., None]) * mask  # (B,Hkv,G,Sq,Sk) f32
+    l = jnp.sum(p, axis=-1)
+    pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v.dtype), v,
+                    preferred_element_type=jnp.float32)
+    out = pv / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, D)
+    return out.astype(q.dtype)
+
+
 def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0):
     """Single-step attention against a cache.
 

@@ -26,7 +26,8 @@ from jax import lax
 
 from repro.configs.base import ArchConfig
 from repro.models import ssm
-from repro.models.attention import decode_attention, flash_attention
+from repro.models.attention import (chunk_attention, decode_attention,
+                                    flash_attention)
 from repro.models.flash_vjp import flash_attention_trainable
 from repro.models.layers import (dense_init, embed_apply, embed_init,
                                  mlp_apply, mlp_init, rmsnorm, rmsnorm_init,
@@ -167,6 +168,59 @@ def attn_block_decode(p, x, k_cache, v_cache, cache_len, cfg: ArchConfig, *,
     return x + ff, k_cache, v_cache
 
 
+def _chunk_attn_block(p, x, k_cache, v_cache, offsets, chunk_lens, positions,
+                      cfg: ArchConfig, *, ring: bool, policy=None):
+    """Chunk-resumable attention block over gathered per-lane cache lanes.
+
+    x: (M,Cb,d) chunk activations; k_cache/v_cache: (M,smax,Hkv,D) this
+    lane's cache; offsets/chunk_lens: (M,) tokens already prefilled / valid
+    tokens in this chunk; positions: (M,Cb) absolute positions.  Computes
+    the chunk's K/V, attends against gathered history + fresh chunk (the
+    exact column set the monolithic prefill sees for these queries), and
+    writes only the *valid* chunk K/V back — pad columns must never land in
+    the cache (on a ring they could wrap onto live history).  Returns
+    (out, new_k, new_v)."""
+    M, Cb, _ = x.shape
+    smax = k_cache.shape[1]
+    h = rmsnorm(p["ln1"], x)
+    q, k, v = _qkv(p, h, cfg, positions, policy)
+    j = jnp.arange(Cb)
+    valid_new = j[None, :] < chunk_lens[:, None]  # (M, Cb)
+    i = jnp.arange(smax)
+    if ring:
+        # history ascending by absolute position: slot p % smax holds
+        # position p, the ring holds at most the last smax positions
+        hist_pos = offsets[:, None] - smax + i[None, :]  # (M, smax)
+        hist_slot = hist_pos % smax
+        k_hist = jnp.take_along_axis(k_cache,
+                                     hist_slot[..., None, None], axis=1)
+        v_hist = jnp.take_along_axis(v_cache,
+                                     hist_slot[..., None, None], axis=1)
+        hist_valid = hist_pos >= 0
+    else:
+        hist_pos = jnp.broadcast_to(i[None, :], (M, smax))
+        k_hist, v_hist = k_cache, v_cache
+        hist_valid = hist_pos < offsets[:, None]
+    k_all = jnp.concatenate([k_hist.astype(k.dtype), k], axis=1)
+    v_all = jnp.concatenate([v_hist.astype(v.dtype), v], axis=1)
+    k_pos = jnp.concatenate([hist_pos, positions], axis=1)
+    k_valid = jnp.concatenate([hist_valid, valid_new], axis=1)
+    attn = chunk_attention(q, k_all, v_all, positions, k_pos, k_valid,
+                           window=cfg.window)
+    write_pos = (positions % smax) if ring else positions
+    write_idx = jnp.where(valid_new, write_pos, smax)  # invalid -> dropped
+    bi = jnp.arange(M)[:, None]
+    new_k = k_cache.at[bi, write_idx].set(k.astype(k_cache.dtype),
+                                          mode="drop")
+    new_v = v_cache.at[bi, write_idx].set(v.astype(v_cache.dtype),
+                                          mode="drop")
+    x = x + matmul(attn.reshape(M, Cb, -1), p["wo"], policy)
+    h2 = rmsnorm(p["ln2"], x)
+    ff, _ = _ffn(p, h2, cfg, policy)
+    out = shard(x + ff, "batch", "tensor", None)
+    return out, new_k, new_v
+
+
 # ---------------------------------------------------------------------------
 # SSM block (norm + mamba)
 # ---------------------------------------------------------------------------
@@ -186,7 +240,8 @@ def ssm_block_init(key, cfg: ArchConfig, dtype):
 
 def ssm_block_apply(p, x, cfg: ArchConfig, state=None, return_state=False):
     h = rmsnorm(p["ln"], x)
-    kw = dict(state=state, return_state=return_state)
+    kw = dict(state=state, return_state=return_state,
+              chunk=getattr(cfg, "ssm_scan_chunk", 64))
     if cfg.ssm_version == 1:
         out = ssm.mamba1_apply(p["mamba"], h, d_state=cfg.ssm_state, **kw)
     else:
@@ -576,6 +631,136 @@ class LM:
             states = self._prefill_ssm_states(params, tokens, None, None)
         return logits[:, 0], kv, states
 
+    def prefill_chunk(self, params, cache: DecodeCache, tokens, offsets,
+                      chunk_lens, slot_ids, *, policy=None):
+        """One chunk of a chunk-resumable prefill over M lanes of a batched
+        decode cache (``cache.length`` must be per-slot ``(B,)``).
+
+        tokens: (M, Cb) int32 right-padded chunk tokens; offsets: (M,)
+        tokens already prefilled per lane (0 = fresh lane: SSM states are
+        zeroed); chunk_lens: (M,) valid tokens in this chunk; slot_ids:
+        (M,) cache lanes (out-of-range = pad lane, dropped by every
+        scatter).  Returns ``(last_logits (M, V), new_cache)`` — logits at
+        each lane's final valid chunk position (the first output token
+        when the chunk completes its prompt) and the cache with KV/conv/h
+        written at the offsets and lane lengths advanced to
+        ``offsets + chunk_lens``.
+
+        Bitwise contract (vs monolithic ``prefill``/``prefill_batched``):
+        attention families may pad chunks to buckets (pad columns are
+        exact-zero additive identities); SSM/hybrid chunks must be exact
+        length (``chunk_lens == Cb``: the conv carry is taken from the raw
+        chunk tail) and every non-final chunk boundary must land on a
+        multiple of ``cfg.ssm_scan_chunk`` (the internal scan's carry
+        points).  History is read back from the cache, so the cache dtype
+        must equal the compute dtype (``kv_cache_dtype`` unset)."""
+        cfg = self.cfg
+        x = embed_apply(params["embed"], tokens)
+        x = shard(x, "batch", None, None)
+        M, Cb = tokens.shape
+        offsets = jnp.asarray(offsets, jnp.int32)
+        chunk_lens = jnp.asarray(chunk_lens, jnp.int32)
+        slot_ids = jnp.asarray(slot_ids, jnp.int32)
+        positions = offsets[:, None] + jnp.arange(Cb)[None, :]  # (M, Cb)
+        data = dict(cache.data)
+        ring = bool(cfg.window) and cfg.family != "hybrid"
+
+        def attn_body(shared):
+            def body(x, inp):
+                lp, kc, vc = inp
+                lp = constrain_layer_params(lp, cfg.n_experts)
+                y, kc2, vc2 = _chunk_attn_block(
+                    lp, x, kc, vc, offsets, chunk_lens, positions, cfg,
+                    ring=ring and not shared, policy=policy)
+                return y, (kc2, vc2)
+            return body
+
+        def ssm_body(x, inp):
+            lp, conv, h = inp
+            lp = constrain_layer_params(lp, cfg.n_experts)
+            y, (c2, h2) = ssm_block_apply(lp, x, cfg, state=(conv, h),
+                                          return_state=True)
+            return y, (c2, h2)
+
+        if cfg.family in ("dense", "moe", "vlm", "audio"):
+            # gather this batch's lanes (OOB pad lanes clamp -> garbage
+            # lanes whose scatters drop), scan the stack, scatter back
+            k_lanes = data["k"][:, slot_ids]  # (L, M, smax, Hkv, D)
+            v_lanes = data["v"][:, slot_ids]
+            x, (k2, v2) = lax.scan(attn_body(False), x,
+                                   (params["layers"], k_lanes, v_lanes))
+            data["k"] = data["k"].at[:, slot_ids].set(k2, mode="drop")
+            data["v"] = data["v"].at[:, slot_ids].set(v2, mode="drop")
+        else:
+            fresh = (offsets == 0)
+            conv_lanes = data["conv"][:, slot_ids]
+            h_lanes = data["h"][:, slot_ids]
+            # a fresh lane inherits the previous occupant's state: zero it
+            # (zeros == the state=None start of the monolithic prefill)
+            conv_lanes = jnp.where(fresh.reshape(1, -1, 1, 1), 0.0,
+                                   conv_lanes)
+            h_lanes = jnp.where(
+                fresh.reshape((1, -1) + (1,) * (h_lanes.ndim - 2)), 0.0,
+                h_lanes)
+            if cfg.family == "ssm":
+                x, (c2, h2) = lax.scan(
+                    ssm_body, x, (params["layers"], conv_lanes, h_lanes))
+            else:  # hybrid: ssm segments + the shared attention block
+                new_conv, new_h = [], []
+                app_idx = 0
+                for (s, e, shared) in self._segments():
+                    seg = jax.tree.map(lambda a: a[s:e], params["layers"])
+                    x, (c2, h2) = lax.scan(
+                        ssm_body, x, (seg, conv_lanes[s:e], h_lanes[s:e]))
+                    new_conv.append(c2)
+                    new_h.append(h2)
+                    if shared:
+                        k_lane = data["k"][app_idx][slot_ids]
+                        v_lane = data["v"][app_idx][slot_ids]
+                        x, k2, v2 = _chunk_attn_block(
+                            params["shared_attn"], x, k_lane, v_lane,
+                            offsets, chunk_lens, positions, cfg,
+                            ring=False, policy=policy)
+                        data["k"] = data["k"].at[app_idx, slot_ids].set(
+                            k2, mode="drop")
+                        data["v"] = data["v"].at[app_idx, slot_ids].set(
+                            v2, mode="drop")
+                        app_idx += 1
+                c2 = jnp.concatenate(new_conv, 0)
+                h2 = jnp.concatenate(new_h, 0)
+            data["conv"] = data["conv"].at[:, slot_ids].set(c2, mode="drop")
+            data["h"] = data["h"].at[:, slot_ids].set(h2, mode="drop")
+
+        length = cache.length.at[slot_ids].set(offsets + chunk_lens,
+                                               mode="drop")
+        x = rmsnorm(params["final_norm"], x)
+        x = x[jnp.arange(M), chunk_lens - 1][:, None]
+        logits = unembed_apply(params["embed"], x, policy)
+        logits = shard(logits, "batch", None, "tensor")
+        return logits[:, 0], DecodeCache(data, length)
+
+    def prefill_chunked(self, params, tokens, chunk_size: int, *,
+                        max_len: Optional[int] = None, policy=None):
+        """Monolithic-prefill equivalent built from ``prefill_chunk`` steps
+        (the parity-test entry point and the reference for the serving
+        scheduler).  tokens: (B, S) exact (no pads).  Returns
+        ``(last_logits (B, V), cache)`` with per-lane lengths — bitwise
+        equal to ``prefill`` for any chunk_size obeying the family's
+        boundary contract (see ``prefill_chunk``)."""
+        B, S = tokens.shape
+        max_len = max_len or S
+        base = self.init_cache(B, max_len)
+        cache = DecodeCache(base.data, jnp.zeros(B, jnp.int32))
+        slot_ids = jnp.arange(B, dtype=jnp.int32)
+        last = None
+        for off in range(0, S, chunk_size):
+            clen = min(chunk_size, S - off)
+            last, cache = self.prefill_chunk(
+                params, cache, tokens[:, off:off + clen],
+                jnp.full((B,), off, jnp.int32),
+                jnp.full((B,), clen, jnp.int32), slot_ids, policy=policy)
+        return last, cache
+
     def decode_scan(self, params, cache: DecodeCache, tok, active, budget,
                     n_steps: int, *, pad_id: int = 0, policy=None,
                     stop_tokens: tuple = ()):
@@ -609,13 +794,23 @@ class LM:
             budget = budget - active.astype(budget.dtype)
             length = jnp.where(active, stepped.length, cache.length)
             new_tok = jnp.where(active[:, None], nxt[:, None], tok)
+            # inactive lanes keep their cache bits verbatim: a lane mid
+            # chunked-prefill holds live partial KV/conv/h state that the
+            # batched decode step would otherwise clobber (SSM state and
+            # ring writes are not masked by length the way linear KV
+            # writes are); active lanes take the stepped data bitwise
+            new_data = jax.tree.map(
+                lambda n, o: jnp.where(
+                    active.reshape((1, active.shape[0])
+                                   + (1,) * (n.ndim - 2)), n, o),
+                stepped.data, cache.data)
             new_active = active & (budget > 0)
             if stop_tokens:
                 stopped = jnp.zeros_like(active)
                 for s in stop_tokens:
                     stopped = stopped | (nxt == jnp.int32(s))
                 new_active = new_active & ~(active & stopped)
-            return (DecodeCache(stepped.data, length), new_tok, new_active,
+            return (DecodeCache(new_data, length), new_tok, new_active,
                     budget), (emit, active)
 
         (cache, tok, active, budget), (toks, emitted) = lax.scan(

@@ -94,6 +94,12 @@ class Request:
     #: times this request was drained off a failing fleet and re-admitted
     #: as a continuation (prefill + decode-path replay) on a surviving one
     requeues: int = 0
+    #: clock time ``submit()`` accepted the request (TTFT origin)
+    submitted_s: Optional[float] = None
+    #: clock time the first output token was committed, at its dispatch
+    #: boundary (TTFT = first_token_s - submitted_s); survives requeues —
+    #: a continuation keeps its original first-token stamp
+    first_token_s: Optional[float] = None
     energy_j: float = 0.0  # total (partial if expired)
     unit_energy_j: Dict[str, float] = dataclasses.field(default_factory=dict)
 
@@ -185,6 +191,25 @@ def _admit_jit(model, ring, params, cache, next_tok, active, budget,
     return DecodeCache(data, length), next_tok, active, budget, first
 
 
+@functools.partial(jax.jit, static_argnums=(0,),
+                   donate_argnums=(2, 3, 4, 5))
+def _chunk_jit(model, params, cache, next_tok, active, budget, tokens,
+               offsets, chunk_lens, slot_ids, final_ids, budgets):
+    """One grouped prefill-chunk dispatch: advance M lanes' chunk-resumable
+    prefills in place, then arm the decode slot state for the lanes whose
+    prompt just completed (``final_ids``; non-final and pad lanes carry the
+    out-of-bounds slot id and are dropped by the scatters).  ``first`` is
+    only fetched by the host when final lanes exist — mid-prompt chunks
+    cost zero host syncs."""
+    last_logits, cache = model.prefill_chunk(params, cache, tokens,
+                                             offsets, chunk_lens, slot_ids)
+    first = jnp.argmax(last_logits, -1).astype(jnp.int32)
+    next_tok = next_tok.at[final_ids, 0].set(first, mode="drop")
+    budget = budget.at[final_ids].set(budgets, mode="drop")
+    active = active.at[final_ids].set(budgets > 0, mode="drop")
+    return cache, next_tok, active, budget, first
+
+
 class BatchedServer:
     """Fixed-slot, device-resident continuous batching server around one LM.
 
@@ -206,7 +231,9 @@ class BatchedServer:
                  deadline_routing: bool = False,
                  accuracy_fleets: Tuple[float, ...] = (),
                  stop_tokens: Tuple[int, ...] = (),
-                 min_bucket: int = 8):
+                 min_bucket: int = 8,
+                 prefill_chunk: Optional[int] = None,
+                 prefill_token_budget: Optional[int] = None):
         self.model = model
         self.params = params
         self.slots = slots
@@ -216,6 +243,35 @@ class BatchedServer:
         self.chip_policy = chip_policy
         self.dispatch_tokens = dispatch_tokens
         self.min_bucket = min_bucket
+        # --- chunked prefill + continuous batching ---------------------
+        # prefill_chunk=N streams prompts through lanes N tokens per step
+        # interleaved with decode dispatches (None = monolithic admission,
+        # the pre-chunking behavior, bit for bit).  prefill_token_budget
+        # caps the total chunk tokens per step (whole chunks, >= 1 lane).
+        if prefill_chunk is not None:
+            if prefill_chunk < 1:
+                raise ValueError("prefill_chunk must be >= 1")
+            if model.cache_dtype != model.dtype:
+                raise ValueError(
+                    "chunked prefill reads KV history back from the cache "
+                    "between chunks, so bitwise parity requires the cache "
+                    "dtype to equal the compute dtype — unset "
+                    f"kv_cache_dtype (cache {model.cache_dtype} != compute "
+                    f"{model.dtype})")
+            if self.cfg.family in ("ssm", "hybrid"):
+                # bitwise-exact resume points only exist at the internal
+                # selective-scan carry boundaries: round the chunk up
+                sc = max(int(getattr(self.cfg, "ssm_scan_chunk", 64)), 1)
+                prefill_chunk = -(-prefill_chunk // sc) * sc
+        self.prefill_chunk = prefill_chunk
+        self.prefill_token_budget = prefill_token_budget
+        self._prefill_pos: Dict[int, int] = {}  # slot -> tokens prefilled
+        self._slot_pf_budget = [0] * slots  # decode budget armed on finish
+        self.prefill_tokens = 0  # cumulative prompt tokens prefilled
+        # decode-stall accounting: prefill vs decode tokens processed on
+        # steps where decode-ready lanes existed (see decode_stall_frac)
+        self._stall_prefill_tokens = 0
+        self._contended_decode_tokens = 0
         # EOS-class token ids: a lane freezes on device the moment it
         # samples one (the stop token is emitted, nothing after it)
         self.stop_tokens = tuple(int(s) for s in stop_tokens)
@@ -323,10 +379,11 @@ class BatchedServer:
 
     def load_report(self) -> Dict[str, float]:
         """Instantaneous load signal for cluster-level routing: queued /
-        seated / parked request counts plus the token backlog (tokens the
-        seated and queued requests still have to decode) normalized against
-        the slots still in service.  Pure host-side bookkeeping — no device
-        sync."""
+        seated / parked request counts plus the token backlog — remaining
+        *prefill + decode tokens* of the seated and queued requests, not a
+        request count, so least-loaded placement doesn't steer long prompts
+        onto already-prompt-heavy dies — normalized against the slots still
+        in service.  Pure host-side bookkeeping — no device sync."""
         queued = sum(len(q) for q in self._queues.values())
         active_tokens = 0
         active = 0
@@ -335,7 +392,9 @@ class BatchedServer:
                 continue
             active += 1
             active_tokens += max(self._slot_quota[s] - len(req.output), 0)
-        queued_tokens = sum(r.max_new_tokens
+            if s in self._prefill_pos:  # prompt tokens still to prefill
+                active_tokens += len(req.prompt) - self._prefill_pos[s]
+        queued_tokens = sum(len(r.prompt) + r.max_new_tokens
                             for q in self._queues.values() for r in q)
         serving_slots = sum(len(ids) for n, ids in self._fleets.items()
                             if self._fleet_in_service(n))
@@ -508,6 +567,8 @@ class BatchedServer:
 
     def submit(self, req: Request):
         self.validate(req)
+        if req.submitted_s is None:  # continuations keep their origin
+            req.submitted_s = self._clock()
         fleet = self._route(req)
         if self.chip_policy is not None:
             req.routed_unit = fleet
@@ -534,6 +595,7 @@ class BatchedServer:
         for s in slots:
             self._active[s] = None
             self._slot_replay[s] = 0
+            self._prefill_pos.pop(s, None)
         if slots:
             self._active_mask = self._active_mask.at[
                 np.asarray(slots, np.int32)].set(False)
@@ -607,6 +669,7 @@ class BatchedServer:
                     and now > req.deadline_s:
                 self._expire(req)
                 self._active[s] = None
+                self._prefill_pos.pop(s, None)
                 released.append(s)
         if released:
             self._active_mask = self._active_mask.at[
@@ -698,6 +761,7 @@ class BatchedServer:
             jnp.asarray(true_lens), jnp.asarray(ids), jnp.asarray(budgets))
         first = np.asarray(first)  # one host sync per admitted batch
         self.host_syncs += 1
+        now = self._clock()
         dead = []
         for j, (req, p, slot) in enumerate(zip(reqs, prompts, slot_ids)):
             # the prefill charge covers the whole prompt forward pass,
@@ -708,10 +772,13 @@ class BatchedServer:
             # overhead of degraded routing, accounted honestly.
             self._charge_unit(req, self._prefill_unit(req),
                               self.flops_per_token * len(p))
+            self.prefill_tokens += len(p)
             self.tokens_decoded += 1
             replay = len(req.output)  # committed tokens a continuation
             if not replay:            # must replay, not re-commit
                 req.output.append(int(first[j]))
+                if req.first_token_s is None:
+                    req.first_token_s = now
             if budgets[j] == 0 or (not replay
                                    and int(first[j]) in self._stop_set):
                 # token budget already met by the prefill logits (or the
@@ -733,6 +800,144 @@ class BatchedServer:
             self._active_mask = self._active_mask.at[
                 np.asarray(dead, np.int32)].set(False)
 
+    # --------------------------------------- continuous batching scheduler
+    def _seat(self, now: float):
+        """Continuous-batching admission: move queued requests into free
+        lanes *immediately* (FIFO per in-service fleet) without touching
+        device state — seated lanes prefill chunk by chunk via
+        ``_advance_prefills`` and only join the decode dispatch once their
+        final chunk arms the slot on device."""
+        self._unpark()
+        for fleet, slot_ids in self._fleets.items():
+            if not self._fleet_in_service(fleet):
+                continue
+            queue = self._queues[fleet]
+            free = [s for s in slot_ids if self._active[s] is None]
+            while queue and free:
+                req = queue.pop(0)
+                if req.deadline_s is not None and now > req.deadline_s:
+                    self._expire(req)  # expired in queue: zero work
+                    continue
+                slot = free.pop(0)
+                self._active[slot] = req
+                self._prefill_pos[slot] = 0
+                cap = req.max_new_tokens - 1
+                if self._len_cap is not None:
+                    cap = min(cap, self._len_cap - len(req.prompt))
+                self._slot_pf_budget[slot] = max(cap, 0)
+                self._slot_quota[slot] = 1 + self._slot_pf_budget[slot]
+                self._slot_replay[slot] = 0
+
+    def _advance_prefills(self, now: float):
+        """Advance every mid-prefill lane by one chunk (<= prefill_chunk
+        tokens), grouped by padded chunk width so same-shape chunks share
+        one dispatch and one compiled program.  Attention families pad the
+        final partial chunk up to a pow2 bucket (exact: pads are masked out
+        of every valid row's context); SSM/hybrid chunks stay exact-length
+        (the conv carry integrates raw inputs, so pads would corrupt it).
+        A lane whose chunk completes the prompt gets its decode slot state
+        armed in the same dispatch; its first output token is committed
+        here (one host sync, only on steps with finishing lanes)."""
+        C = self.prefill_chunk
+        lanes = sorted(self._prefill_pos)
+        if self.prefill_token_budget is not None and lanes:
+            kept, total = [], 0
+            for s in lanes:  # whole chunks in lane order, always >= 1
+                clen = min(C, len(self._active[s].prompt)
+                           - self._prefill_pos[s])
+                if kept and total + clen > self.prefill_token_budget:
+                    break
+                kept.append(s)
+                total += clen
+            lanes = kept
+        groups: Dict[int, List[int]] = {}
+        for s in lanes:
+            clen = min(C, len(self._active[s].prompt)
+                       - self._prefill_pos[s])
+            cb = min(bucket_length(clen, lo=self.min_bucket), C) \
+                if self._bucketed else clen
+            groups.setdefault(cb, []).append(s)
+        for cb, slots in sorted(groups.items()):
+            M = len(slots)
+            Mb = 1
+            while Mb < M:  # pow2 lane pad: chunk programs are shared
+                Mb *= 2    # across prompts and steps
+            tokens = np.full((Mb, cb), self.pad_id, np.int32)
+            offs = np.zeros(Mb, np.int32)
+            clens = np.ones(Mb, np.int32)
+            ids = np.full(Mb, self.slots, np.int32)  # OOB pads: dropped
+            final_ids = np.full(Mb, self.slots, np.int32)
+            budgets = np.zeros(Mb, np.int32)
+            finals: List[int] = []
+            for j, s in enumerate(slots):
+                req = self._active[s]
+                p = np.asarray(req.prompt)
+                off = self._prefill_pos[s]
+                clen = min(C, len(p) - off)
+                tokens[j, :clen] = p[off:off + clen]
+                offs[j] = off
+                clens[j] = clen
+                ids[j] = s
+                if off + clen == len(p):
+                    final_ids[j] = s
+                    budgets[j] = self._slot_pf_budget[s]
+                    finals.append(j)
+            (self.cache, self._next_tok, self._active_mask, self._budget,
+             first) = _chunk_jit(
+                self.model, self.params, self.cache, self._next_tok,
+                self._active_mask, self._budget, jnp.asarray(tokens),
+                jnp.asarray(offs), jnp.asarray(clens), jnp.asarray(ids),
+                jnp.asarray(final_ids), jnp.asarray(budgets))
+            if finals:
+                first = np.asarray(first)  # host sync only when lanes end
+                self.host_syncs += 1
+            dead = []
+            for j, s in enumerate(slots):
+                req = self._active[s]
+                clen = int(clens[j])
+                self.prefill_tokens += clen
+                self._charge_unit(req, self._prefill_unit(req),
+                                  self.flops_per_token * clen)
+                if final_ids[j] == self.slots:
+                    self._prefill_pos[s] = int(offs[j]) + clen
+                    continue
+                # final chunk: the prompt's last logits just produced the
+                # first output token — same commit semantics as
+                # _admit_batch (replay skip, first-token EOS, zero budget)
+                del self._prefill_pos[s]
+                self.tokens_decoded += 1
+                replay = len(req.output)
+                if not replay:
+                    req.output.append(int(first[j]))
+                    if req.first_token_s is None:
+                        req.first_token_s = now
+                if budgets[j] == 0 or (not replay
+                                       and int(first[j]) in self._stop_set):
+                    self._finish(req)
+                    self._active[s] = None
+                    if budgets[j] > 0:
+                        dead.append(s)  # free the armed lane on device
+                else:
+                    self._slot_replay[s] = max(replay - 1, 0)
+            if dead:
+                self._active_mask = self._active_mask.at[
+                    np.asarray(dead, np.int32)].set(False)
+
+    @property
+    def decode_stall_frac(self) -> float:
+        """Fraction of contended-step token work spent on prefill: over the
+        steps that performed prefill work while decode-ready lanes existed
+        (measured before admission), prefill tokens processed / (prefill +
+        decode tokens processed in those same steps).  A monolithic 4k
+        admission makes its step almost pure prefill (frac -> 1) while the
+        live decode lanes crawl; a chunked engine caps each step's prefill
+        share at roughly chunk / (chunk + dispatch work).  High values mean
+        prompt admission starved live decode streams — exactly the
+        utilization cliff chunked prefill removes.  Clock-free and
+        deterministic."""
+        tot = self._stall_prefill_tokens + self._contended_decode_tokens
+        return self._stall_prefill_tokens / max(tot, 1)
+
     def _filter_dispatch(self, active_slots: List[int], toks_np: np.ndarray,
                          emitted_np: np.ndarray, now: float,
                          dispatch_dt_s: float
@@ -747,15 +952,33 @@ class BatchedServer:
 
     # ------------------------------------------------------------ decoding
     def step(self, max_tokens: Optional[int] = None) -> int:
-        """One fused decode dispatch over all active slots (up to
-        ``max_tokens`` tokens each, default 1).  Returns #active slots."""
+        """One scheduler step: admission (monolithic, or chunked-prefill
+        advance under continuous batching), then one fused decode dispatch
+        over the decode-ready slots (up to ``max_tokens`` tokens each,
+        default 1).  Returns #seated slots (mid-prefill lanes count: the
+        engine is not idle while they stream)."""
         now = self._clock()
         self._expire_active(now)
-        self._admit(now)
+        # decode-ready lanes BEFORE admission: if any exist, this step is
+        # contended and its prefill/decode token split feeds
+        # ``decode_stall_frac``
+        decode_ready = sum(1 for s, r in enumerate(self._active)
+                           if r is not None and s not in self._prefill_pos)
+        pf0 = self.prefill_tokens
+        if self.prefill_chunk is not None:
+            self._seat(now)
+            self._advance_prefills(now)
+        else:
+            self._admit(now)
+        pf_delta = self.prefill_tokens - pf0
+        contended = decode_ready > 0 and pf_delta > 0
+        if contended:
+            self._stall_prefill_tokens += pf_delta
+        n_seated = sum(1 for r in self._active if r is not None)
         active_slots = [s for s, r in enumerate(self._active)
-                        if r is not None]
+                        if r is not None and s not in self._prefill_pos]
         if not active_slots:
-            return 0
+            return n_seated
         n = 1 if max_tokens is None else max(1, int(max_tokens))
         t_dispatch = time.perf_counter()
         (self.cache, self._next_tok, self._active_mask, self._budget,
@@ -774,11 +997,13 @@ class BatchedServer:
             active_slots, np.asarray(toks_np), np.asarray(emitted_np), now,
             time.perf_counter() - t_dispatch)
         released = []
+        decode_emitted = 0
         for slot in active_slots:
             req = self._active[slot]
             if req is None:  # drained by the resilience filter mid-dispatch
                 continue
             count = int(emitted_np[:, slot].sum())
+            decode_emitted += count
             for t in range(n):
                 if emitted_np[t, slot]:
                     if self._slot_replay[slot]:
@@ -810,7 +1035,9 @@ class BatchedServer:
         if released:
             self._active_mask = self._active_mask.at[
                 np.asarray(released, np.int32)].set(False)
-        return len(active_slots)
+        if contended:
+            self._contended_decode_tokens += decode_emitted
+        return n_seated
 
     def run(self, max_steps: int = 10_000,
             dispatch_tokens: Optional[int] = None) -> List[Request]:

@@ -237,6 +237,8 @@ class ResilientServer(BatchedServer):
 
     def submit(self, req: Request):
         self.validate(req)
+        if req.submitted_s is None:  # TTFT origin (continuations keep it)
+            req.submitted_s = self._clock()
         fleet = self._route(req)  # raises UnitFault when nothing serves
         if self._degraded():
             depth = len(self._queues[fleet])
