@@ -63,6 +63,13 @@ GUARDS = {
     # time lands within the machine-model tolerance of its roofline
     # prediction (the bench hard-asserts a floor before appending)
     "benchgen_bench.json": (("frac_within_tol", "higher"),),
+    # telemetry tracing overhead on the warm fused decode path: the
+    # enabled/disabled throughput ratio minus one, measured in-process so
+    # runner speed cancels.  Guarded against an *absolute* ceiling (a
+    # 3-tuple guard), not the trajectory median: the contract is "tracing
+    # costs < 5%", full stop, and a history of cheap runs must not excuse
+    # a newly-expensive one.
+    "telemetry_bench.json": (("overhead_frac", "abs_ceiling", 0.05),),
 }
 
 
@@ -97,6 +104,27 @@ def check_file(path: str, key: str, direction: str,
     return ok
 
 
+def check_abs(path: str, key: str, limit: float) -> bool:
+    """Absolute-ceiling guard: the *fresh* (last) record's ``key`` must not
+    exceed ``limit``, independent of the committed history."""
+    name = os.path.basename(path)
+    if not os.path.exists(path):
+        print(f"  {name}: missing — skipped")
+        return True
+    with open(path) as f:
+        rows = json.load(f)
+    rows = [r for r in rows if key in r]
+    if not rows:
+        print(f"  {name}: no record with {key!r} — skipped")
+        return True
+    fresh = float(rows[-1][key])
+    ok = fresh <= limit
+    verdict = "OK" if ok else "REGRESSION"
+    print(f"  {name}: {key} fresh={fresh:.4g} (absolute ceiling "
+          f"{limit:.4g}) -> {verdict}")
+    return ok
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--results", default="results")
@@ -109,9 +137,13 @@ def main() -> int:
           f"{args.max_slowdown:.0%}):")
     ok = True
     for fname, guards in GUARDS.items():
-        for key, direction in guards:
-            ok &= check_file(os.path.join(args.results, fname), key,
-                             direction, args.max_slowdown)
+        for guard in guards:
+            path = os.path.join(args.results, fname)
+            if len(guard) == 3 and guard[1] == "abs_ceiling":
+                ok &= check_abs(path, guard[0], guard[2])
+            else:
+                key, direction = guard
+                ok &= check_file(path, key, direction, args.max_slowdown)
     if not ok:
         print("FAIL: warm-path benchmark regression above threshold")
         return 1

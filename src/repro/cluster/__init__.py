@@ -9,6 +9,11 @@ front-end.
     ``latency_stats`` — the seeded bursty/diurnal open-loop load generator;
   * ``ChipClass`` / ``tune_cluster`` — chip-mix + fleet-size co-design
     under total area/TDP budgets.
+
+Telemetry: pass ``tracer=repro.telemetry.Tracer()`` to ``ClusterRouter``
+(shared by every die, so span trees survive cross-die migration) and to
+``replay`` (arrival system events); ``trace_cluster`` below wires both and
+returns the tracer (``docs/telemetry.md``).
 """
 from repro.cluster.loadgen import (Arrival, RequestClass, StepCost,
                                    TraceConfig, generate, latency_stats,
@@ -16,10 +21,24 @@ from repro.cluster.loadgen import (Arrival, RequestClass, StepCost,
 from repro.cluster.router import ClusterRouter, SimClock
 from repro.cluster.spec import ClusterSpec, homogeneous
 from repro.cluster.tune import ChipClass, ClusterTuneResult, tune_cluster
+from repro.telemetry import Tracer
+
+
+def trace_cluster(router: ClusterRouter) -> Tracer:
+    """Attach a fresh recording ``Tracer`` to an already-built router (and
+    every die replica it owns); returns the tracer.  Pass it as
+    ``replay(..., tracer=...)`` to record arrivals too."""
+    tracer = Tracer()
+    router.tracer = tracer
+    for name, srv in router.servers.items():
+        srv.tracer = tracer
+        srv.trace_site = name
+    return tracer
+
 
 __all__ = [
     "Arrival", "ChipClass", "ClusterRouter", "ClusterSpec",
     "ClusterTuneResult", "RequestClass", "SimClock", "StepCost",
-    "TraceConfig", "generate", "homogeneous", "latency_stats", "replay",
-    "tune_cluster",
+    "TraceConfig", "Tracer", "generate", "homogeneous", "latency_stats",
+    "replay", "trace_cluster", "tune_cluster",
 ]

@@ -32,6 +32,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.serve.engine import Request, RequestRejected
+from repro.telemetry.tracer import Event as TraceEvent
 
 
 @dataclasses.dataclass(frozen=True)
@@ -168,7 +169,8 @@ def replay(target, arrivals: Sequence[Arrival], clock, *,
            tick_s: float, dispatch_tokens: Optional[int] = None,
            max_steps: int = 100_000,
            carryover: Optional[Dict[int, float]] = None,
-           cost: Optional[StepCost] = None
+           cost: Optional[StepCost] = None,
+           tracer=None
            ) -> Dict[str, object]:
     """Open-loop replay of a trace against a server or ``ClusterRouter``.
 
@@ -190,6 +192,11 @@ def replay(target, arrivals: Sequence[Arrival], clock, *,
     step by that step's measured token work, making scheduling-induced
     queueing delay observable in simulated time; ``cost=None`` is the
     plain fixed-tick replay, unchanged.
+
+    ``tracer`` (a ``repro.telemetry.Tracer``) records each arrival as a
+    system event (class + uid at the arrival instant), so a trace
+    exported from a replay carries the offered load alongside the
+    engine-side spans.  Pass the same tracer the target was built with.
     """
     pending = sorted(arrivals, key=lambda a: a.at_s)
     submit_t = dict(carryover or {})
@@ -204,6 +211,10 @@ def replay(target, arrivals: Sequence[Arrival], clock, *,
     for _ in range(max_steps):
         clock.t += tick_s
         while i < len(pending) and pending[i].at_s <= clock.t:
+            if tracer is not None and tracer.enabled:
+                tracer.system_event(TraceEvent.ARRIVAL, pending[i].at_s,
+                                    cls=pending[i].cls,
+                                    uid=pending[i].request.uid)
             try:
                 target.submit(pending[i].request)
                 watch[pending[i].request.uid] = pending[i].request
@@ -245,6 +256,11 @@ def _drain_finished(target) -> List[Request]:
     return out
 
 
+def _finite(values) -> np.ndarray:
+    v = np.asarray(sorted(values), float)
+    return v[np.isfinite(v)] if v.size else v
+
+
 def latency_stats(latency_s: Dict[int, float],
                   ttft_s: Optional[Dict[int, float]] = None
                   ) -> Dict[str, float]:
@@ -252,22 +268,30 @@ def latency_stats(latency_s: Dict[int, float],
     replay's ``ttft_s`` records too and time-to-first-token percentiles
     are reported separately (admission latency is a different SLO than
     completion latency — a chunked-prefill engine improves the former
-    without touching the latter)."""
-    if not latency_s:
+    without touching the latter).
+
+    Edge cases are well-defined and NaN-free by contract: an empty record
+    dict — an empty request list, or a trace where every request parked /
+    expired before its first commit and so never produced a latency
+    record — yields ``n == 0`` with every percentile 0.0 (read ``n``
+    before trusting the zeros).  Non-finite values (NaN/inf, e.g. from a
+    corrupted carryover stamp) are dropped from the percentiles; ``n``
+    counts only the finite records that contributed."""
+    v = _finite(latency_s.values())
+    if not v.size:
         out = dict(n=0, p50_s=0.0, p99_s=0.0, mean_s=0.0, max_s=0.0)
     else:
-        v = np.asarray(sorted(latency_s.values()))
         out = dict(n=int(v.size),
                    p50_s=float(np.percentile(v, 50)),
                    p99_s=float(np.percentile(v, 99)),
                    mean_s=float(v.mean()),
                    max_s=float(v.max()))
     if ttft_s is not None:
-        if not ttft_s:
+        w = _finite(ttft_s.values())
+        if not w.size:
             out.update(n_ttft=0, p50_ttft_s=0.0, p99_ttft_s=0.0,
                        mean_ttft_s=0.0, max_ttft_s=0.0)
         else:
-            w = np.asarray(sorted(ttft_s.values()))
             out.update(n_ttft=int(w.size),
                        p50_ttft_s=float(np.percentile(w, 50)),
                        p99_ttft_s=float(np.percentile(w, 99)),

@@ -47,6 +47,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 from repro.cluster.spec import ClusterSpec
 from repro.core.chip import ChipPolicy, ChipSpec
 from repro.serve.engine import BatchedServer, Request, RequestRejected
+from repro.telemetry.tracer import NULL_TRACER
+from repro.telemetry.tracer import Event as TraceEvent
 
 
 class SimClock:
@@ -76,11 +78,16 @@ class ClusterRouter:
                  server_factory: Optional[Callable[
                      [str, ChipSpec, ChipPolicy], BatchedServer]] = None,
                  tech_params=None,
+                 tracer=None,
                  **server_kw):
         self.cluster = cluster
         self.model = model
         self.params = params
         self._clock = clock
+        # one tracer shared by every die's engine: a request migrated
+        # across dies keeps one causal span tree (each die stamps its own
+        # trace_site on the spans it records)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.policies: Dict[str, ChipPolicy] = {}
         self.servers: Dict[str, BatchedServer] = {}
         self._deadline_routing = bool(server_kw.get("deadline_routing"))
@@ -102,6 +109,9 @@ class ClusterRouter:
                 srv = BatchedServer(model, params, slots=n_slots,
                                     max_len=max_len, chip_policy=policy,
                                     clock=clock, **server_kw)
+            if tracer is not None:  # custom factories keep their own wiring
+                srv.tracer = self.tracer
+            srv.trace_site = spec.name
             self.servers[spec.name] = srv
             self._util_samples[spec.name] = []
 
@@ -160,6 +170,11 @@ class ClusterRouter:
         req.rejected = True
         req.reject_reason = f"[{code}] {reason}"
         self.rejected.append(req)
+        if self.tracer.enabled:
+            now = self._clock()
+            self.tracer.request_begin(req.uid, now)
+            self.tracer.event(req.uid, TraceEvent.REJECT, now, code=code)
+            self.tracer.end_request(req.uid, now, "rejected")
         raise RequestRejected(req, code, reason)
 
     def submit(self, req: Request) -> str:
@@ -193,6 +208,11 @@ class ClusterRouter:
             # every feasible die is failed/out of service: park, don't drop
             self.servers[feasible[0].name].validate(req)  # shape/type checks
             self._parked.append(req)
+            if self.tracer.enabled:
+                now = self._clock()
+                self.tracer.request_begin(req.uid, now)
+                self.tracer.event(req.uid, TraceEvent.PARK, now,
+                                  site="cluster")
             return ""
         self.servers[target].submit(req)
         return target
@@ -206,6 +226,9 @@ class ClusterRouter:
         survives.  Returns the evacuated requests."""
         self.cluster.chip(name)  # raises on unknown die
         self._failed.add(name)
+        if self.tracer.enabled:
+            self.tracer.system_event(TraceEvent.FAULT, self._clock(),
+                                     site=name, kind="die_kill")
         moved = self.servers[name].evacuate()
         for req in moved:
             self._migrate(req)
@@ -215,6 +238,9 @@ class ClusterRouter:
         """Return a failed die to service and re-place parked traffic."""
         self.cluster.chip(name)
         self._failed.discard(name)
+        if self.tracer.enabled:
+            self.tracer.system_event(TraceEvent.PROBE, self._clock(),
+                                     site=name, kind="die_restore")
         self._unpark()
 
     def _migrate(self, req: Request) -> str:
@@ -222,7 +248,13 @@ class ClusterRouter:
         target = self.route(req)
         if target is None:
             self._parked.append(req)
+            if self.tracer.enabled:
+                self.tracer.event(req.uid, TraceEvent.PARK, self._clock(),
+                                  site="cluster")
             return ""
+        if self.tracer.enabled:
+            self.tracer.event(req.uid, TraceEvent.MIGRATE, self._clock(),
+                              site="cluster", to_site=target)
         self.servers[target].requeue(req)
         self.migrations += 1
         return target

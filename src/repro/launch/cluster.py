@@ -27,6 +27,11 @@ def main():
     ap.add_argument("--fail-at", type=float, default=None,
                     help="kill --fail-die at this simulated time")
     ap.add_argument("--fail-die", default="eco")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record a cluster-wide telemetry trace and write "
+                         "it here: *.jsonl -> compact JSONL event log, "
+                         "anything else -> Chrome-trace JSON (open in "
+                         "chrome://tracing or ui.perfetto.dev)")
     args = ap.parse_args()
 
     import jax
@@ -59,10 +64,15 @@ def main():
         chip.ChipSpec("eco", (unit("decode_eco", FP8_E4M3, 1e-2, 0.5),)),
         chip.ChipSpec("gold", (unit("decode_gold", FP32, 1e-8, 4.0),))))
     clock = SimClock()
+    tracer = None
+    if args.trace_out is not None:
+        from repro.telemetry import Tracer
+        tracer = Tracer()
     router = ClusterRouter(model, params, cluster, slots=args.slots,
                            max_len=args.max_len, clock=clock,
                            accuracy_fleets=(5e-2, 1e-7),
-                           dispatch_tokens=args.dispatch_tokens)
+                           dispatch_tokens=args.dispatch_tokens,
+                           tracer=tracer)
     trace = generate(
         TraceConfig(horizon_s=args.horizon, base_rate_rps=args.rate,
                     seed=args.seed,
@@ -76,20 +86,22 @@ def main():
 
     if args.fail_at is None:
         rep = replay(router, trace, clock, tick_s=args.tick,
-                     dispatch_tokens=args.dispatch_tokens)
+                     dispatch_tokens=args.dispatch_tokens, tracer=tracer)
     else:
         # split replay around the failure so the kill lands mid-traffic
         pre = [a for a in trace if a.at_s < args.fail_at]
         post = [a for a in trace if a.at_s >= args.fail_at]
         rep = replay(router, pre, clock, tick_s=args.tick,
                      dispatch_tokens=args.dispatch_tokens,
-                     max_steps=int(args.fail_at / args.tick))
+                     max_steps=int(args.fail_at / args.tick),
+                     tracer=tracer)
         moved = router.fail_chip(args.fail_die)
         print(f"killed die {args.fail_die!r} at t={clock.t:.2f}s: "
               f"{len(moved)} requests evacuated")
         rep2 = replay(router, post, clock, tick_s=args.tick,
                       dispatch_tokens=args.dispatch_tokens,
-                      carryover={a.request.uid: a.at_s for a in pre})
+                      carryover={a.request.uid: a.at_s for a in pre},
+                      tracer=tracer)
         rep["finished"] = rep["finished"] + rep2["finished"]
         rep["latency_s"].update(rep2["latency_s"])
         rep["expired"] = rep["expired"] + rep2["expired"]
@@ -105,6 +117,14 @@ def main():
     print("per-die utilization:",
           json.dumps({k: round(v, 3)
                       for k, v in router.utilization_report().items()}))
+
+    if tracer is not None:
+        from repro.telemetry import write_chrome_trace, write_jsonl
+        if args.trace_out.endswith(".jsonl"):
+            write_jsonl(tracer, args.trace_out)
+        else:
+            write_chrome_trace(tracer, args.trace_out)
+        print(f"trace: {len(tracer.spans)} spans -> {args.trace_out}")
 
 
 if __name__ == "__main__":

@@ -38,6 +38,11 @@ def main():
                     help="fault onset, simulated seconds")
     ap.add_argument("--chaos-seed", type=int, default=7,
                     help="FaultInjector RNG seed")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record a telemetry trace and write it here: "
+                         "*.jsonl -> compact JSONL event log, anything "
+                         "else -> Chrome-trace JSON (open in "
+                         "chrome://tracing or ui.perfetto.dev)")
     args = ap.parse_args()
 
     import jax
@@ -54,14 +59,20 @@ def main():
     params = model.init(jax.random.key(0))
     stops = () if args.stop_token is None else (args.stop_token,)
 
+    tracer = None
+    if args.trace_out is not None:
+        from repro.telemetry import Tracer
+        tracer = Tracer()
+
     if args.chaos is not None:
-        _run_chaos(args, cfg, model, params, stops)
+        _run_chaos(args, cfg, model, params, stops, tracer)
+        _write_trace(tracer, args.trace_out)
         return
 
     server = BatchedServer(model, params, slots=args.slots,
                            max_len=args.max_len,
                            dispatch_tokens=args.dispatch_tokens,
-                           stop_tokens=stops)
+                           stop_tokens=stops, tracer=tracer)
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab_size,
@@ -76,9 +87,21 @@ def main():
     print(f"{len(finished)}/{len(reqs)} requests completed, {toks} tokens, "
           f"{server.dispatches} fused dispatches, "
           f"{server.host_syncs} host syncs")
+    _write_trace(tracer, args.trace_out)
 
 
-def _run_chaos(args, cfg, model, params, stops):
+def _write_trace(tracer, path):
+    if tracer is None or path is None:
+        return
+    from repro.telemetry import write_chrome_trace, write_jsonl
+    if path.endswith(".jsonl"):
+        write_jsonl(tracer, path)
+    else:
+        write_chrome_trace(tracer, path)
+    print(f"trace: {len(tracer.spans)} spans -> {path}")
+
+
+def _run_chaos(args, cfg, model, params, stops, tracer=None):
     """Fault-injection demo: a tiered fp8/fp32 die, one seeded fault on
     the cheap fleet mid-run, every request still completes."""
     import numpy as np
@@ -118,7 +141,8 @@ def _run_chaos(args, cfg, model, params, stops):
         clock=lambda: clock_t[0],
         injector=FaultInjector((event,), seed=args.chaos_seed),
         resilience=ResilienceConfig(synthetic_dispatch_s=tick,
-                                    probe_interval_s=1.0))
+                                    probe_interval_s=1.0),
+        tracer=tracer)
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab_size,

@@ -69,6 +69,8 @@ import numpy as np
 
 from repro.faults import UnitFault
 from repro.models import LM, DecodeCache
+from repro.telemetry.tracer import NULL_TRACER
+from repro.telemetry.tracer import Event as TraceEvent
 
 
 @dataclasses.dataclass
@@ -233,7 +235,8 @@ class BatchedServer:
                  stop_tokens: Tuple[int, ...] = (),
                  min_bucket: int = 8,
                  prefill_chunk: Optional[int] = None,
-                 prefill_token_budget: Optional[int] = None):
+                 prefill_token_budget: Optional[int] = None,
+                 tracer=None):
         self.model = model
         self.params = params
         self.slots = slots
@@ -335,12 +338,31 @@ class BatchedServer:
                                  for name in self._fleets}
         self._queues: Dict[str, List[Request]] = {name: []
                                                   for name in self._fleets}
+        self._slot_fleet = {s: name for name, ids in self._fleets.items()
+                            for s in ids}
+        # --- telemetry -------------------------------------------------
+        # The tracer records span trees + metric timelines on the injected
+        # clock (see repro.telemetry).  Default is the no-op NULL_TRACER:
+        # every instrumentation site below is guarded by ``tracer.enabled``
+        # so the disabled hot path pays one attribute read per site
+        # (overhead asserted in benchmarks/telemetry_bench.py).
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        #: die/site label stamped on spans and metric samples (the cluster
+        #: router sets it to the die name)
+        self.trace_site = ""
+        self.reset_run_counters()
 
     # ------------------------------------------------------- chip telemetry
-    def _charge_unit(self, req: Request, unit, flops: float) -> None:
+    def _charge_unit(self, req: Request, unit, flops: float,
+                     phase: str = "decode") -> None:
         """Account ``flops`` on ``unit`` (bulk form, dispatch-boundary),
         at the unit's *current* health pricing (a throttled unit's leakage
-        energy per FLOP grows with the derate)."""
+        energy per FLOP grows with the derate).
+
+        This is the single energy choke point — every prefill, decode,
+        replay, and wasted-corrupt-dispatch charge flows through here — so
+        the tracer hook below makes span-attributed energy reconcile
+        exactly against the ``_unit_energy_j`` chip ledger."""
         if self.chip_policy is None or not flops or unit is None:
             return
         e_j = self.chip_policy.unit_energy_j(unit, flops)
@@ -349,6 +371,9 @@ class BatchedServer:
             req.unit_energy_j.get(unit.name, 0.0) + e_j
         self._unit_energy_j[unit.name] = \
             self._unit_energy_j.get(unit.name, 0.0) + e_j
+        if self.tracer.enabled:
+            self.tracer.charge(req.uid, unit.name, e_j, flops,
+                               self._clock(), phase=phase)
 
     def _prefill_unit(self, req: Request):
         if self.chip_policy is None:
@@ -356,8 +381,46 @@ class BatchedServer:
         return self.chip_policy.unit_for_phase(
             "prefill", precision=req.precision or self._precision)
 
+    def reset_run_counters(self) -> None:
+        """Deterministically reset the per-run counters.
+
+        ``run()`` calls this at entry so back-to-back runs don't leak
+        scheduler state into each other's metrics: the decode-stall inputs
+        (``_stall_prefill_tokens`` / ``_contended_decode_tokens``) are
+        zeroed, and the cumulative counters (tokens, dispatches, syncs,
+        energy) are snapshotted so ``run_report()`` exposes this run's
+        deltas.  The cumulative surfaces (``energy_report()``,
+        ``tokens_decoded`` ...) are *not* reset — they remain
+        everything-served-so-far by contract.  Step-driven callers
+        (``loadgen.replay``) may call this themselves to scope the stall
+        fraction to a window."""
+        self._stall_prefill_tokens = 0
+        self._contended_decode_tokens = 0
+        self._run_base = dict(
+            tokens_decoded=self.tokens_decoded,
+            prefill_tokens=self.prefill_tokens,
+            dispatches=self.dispatches,
+            host_syncs=self.host_syncs,
+            energy_j=sum(self._unit_energy_j.values()))
+
+    def run_report(self) -> Dict[str, float]:
+        """Counters scoped to the current run (deltas since the last
+        ``reset_run_counters()`` — which ``run()`` performs at entry)."""
+        return dict(
+            tokens_decoded=self.tokens_decoded
+            - self._run_base["tokens_decoded"],
+            prefill_tokens=self.prefill_tokens
+            - self._run_base["prefill_tokens"],
+            dispatches=self.dispatches - self._run_base["dispatches"],
+            host_syncs=self.host_syncs - self._run_base["host_syncs"],
+            energy_j=sum(self._unit_energy_j.values())
+            - self._run_base["energy_j"],
+            decode_stall_frac=self.decode_stall_frac)
+
     def energy_report(self) -> Dict[str, object]:
-        """Chip-level energy aggregated over everything served so far."""
+        """Chip-level energy aggregated over everything served so far
+        (cumulative across runs; see ``run_report()`` for per-run
+        deltas)."""
         total = sum(self._unit_energy_j.values())
         return dict(
             chip=self.chip_policy.spec.name if self.chip_policy else None,
@@ -521,6 +584,13 @@ class BatchedServer:
         req.rejected = True
         req.reject_reason = f"[{code}] {reason}"
         self.rejected.append(req)
+        if self.tracer.enabled:
+            now = self._clock()
+            self.tracer.request_begin(req.uid, now)
+            self.tracer.event(req.uid, TraceEvent.REJECT, now, code=code,
+                              site=self.trace_site)
+            self.tracer.end_attempt(req.uid, now, "rejected")
+            self.tracer.end_request(req.uid, now, "rejected")
         raise RequestRejected(req, code, reason)
 
     def validate(self, req: Request) -> None:
@@ -573,6 +643,15 @@ class BatchedServer:
         if self.chip_policy is not None:
             req.routed_unit = fleet
         self._queues[fleet].append(req)
+        if self.tracer.enabled:
+            self.tracer.request_begin(
+                req.uid, req.submitted_s,
+                prompt_tokens=int(np.asarray(req.prompt).size),
+                max_new_tokens=req.max_new_tokens,
+                precision=req.precision, accuracy_slo=req.accuracy_slo,
+                deadline_s=req.deadline_s)
+            self.tracer.event(req.uid, TraceEvent.ADMIT, self._clock(),
+                              site=self.trace_site, fleet=fleet)
 
     def _bucket(self, n: int) -> int:
         if not self._bucketed:
@@ -584,6 +663,15 @@ class BatchedServer:
     def _finish(self, req: Request):
         req.done = True
         self.finished.append(req)
+        if self.tracer.enabled:
+            now = self._clock()
+            status = "expired" if req.expired else "ok"
+            self.tracer.event(
+                req.uid,
+                TraceEvent.EXPIRE if req.expired else TraceEvent.FINISH,
+                now, site=self.trace_site, tokens_out=len(req.output))
+            self.tracer.end_attempt(req.uid, now, status)
+            self.tracer.end_request(req.uid, now, status)
 
     def _expire(self, req: Request):
         req.expired = True
@@ -592,7 +680,14 @@ class BatchedServer:
     # ------------------------------------------------ drain / re-admission
     def _release_slots(self, slots: List[int]) -> None:
         """Free engine+device slot state without touching the requests."""
+        tr = self.tracer
         for s in slots:
+            req = self._active[s]
+            if req is not None and tr.enabled:
+                now = self._clock()
+                tr.event(req.uid, TraceEvent.DRAIN, now,
+                         site=self.trace_site, slot=s)
+                tr.end_attempt(req.uid, now, "drained")
             self._active[s] = None
             self._slot_replay[s] = 0
             self._prefill_pos.pop(s, None)
@@ -617,10 +712,17 @@ class BatchedServer:
             fleet = self._route(req)
         except UnitFault:
             self._parked.append(req)
+            if self.tracer.enabled:
+                self.tracer.event(req.uid, TraceEvent.PARK, self._clock(),
+                                  site=self.trace_site)
             return ""
         if self.chip_policy is not None:
             req.routed_unit = fleet
         self._queues[fleet].insert(0, req)
+        if self.tracer.enabled:
+            self.tracer.event(req.uid, TraceEvent.REQUEUE, self._clock(),
+                              site=self.trace_site, fleet=fleet,
+                              requeues=req.requeues)
         return fleet
 
     def set_fleet_in_service(self, name: str, in_service: bool) -> None:
@@ -697,6 +799,10 @@ class BatchedServer:
             if self.chip_policy is not None:
                 req.routed_unit = fleet
             self._queues[fleet].insert(0, req)
+            if self.tracer.enabled:
+                self.tracer.event(req.uid, TraceEvent.UNPARK,
+                                  self._clock(), site=self.trace_site,
+                                  fleet=fleet)
 
     def _admit(self, now: float):
         self._unpark()
@@ -763,7 +869,17 @@ class BatchedServer:
         self.host_syncs += 1
         now = self._clock()
         dead = []
+        tr = self.tracer
         for j, (req, p, slot) in enumerate(zip(reqs, prompts, slot_ids)):
+            if tr.enabled:
+                tr.begin_attempt(req.uid, now, site=self.trace_site,
+                                 fleet=self._slot_fleet.get(slot, ""),
+                                 slot=slot)
+                tr.event(req.uid, TraceEvent.SEAT, now, slot=slot)
+                tr.event(req.uid, TraceEvent.PREFILL, now, tokens=len(p),
+                         bucket=bucket, slot=slot)
+                tr.count("bucket_hit", now,
+                         1.0 if bucket == len(p) else 0.0, self.trace_site)
             # the prefill charge covers the whole prompt forward pass,
             # including the logits that produce the next output token —
             # decode charges start with the first fused decode step.  A
@@ -771,7 +887,8 @@ class BatchedServer:
             # its committed tokens: that repeated work IS the energy
             # overhead of degraded routing, accounted honestly.
             self._charge_unit(req, self._prefill_unit(req),
-                              self.flops_per_token * len(p))
+                              self.flops_per_token * len(p),
+                              phase="prefill")
             self.prefill_tokens += len(p)
             self.tokens_decoded += 1
             replay = len(req.output)  # committed tokens a continuation
@@ -779,6 +896,9 @@ class BatchedServer:
                 req.output.append(int(first[j]))
                 if req.first_token_s is None:
                     req.first_token_s = now
+                if tr.enabled:  # the prefill logits committed one token
+                    tr.event(req.uid, TraceEvent.DECODE_DISPATCH, now,
+                             tokens=1, slot=slot, first=True)
             if budgets[j] == 0 or (not replay
                                    and int(first[j]) in self._stop_set):
                 # token budget already met by the prefill logits (or the
@@ -827,6 +947,12 @@ class BatchedServer:
                 self._slot_pf_budget[slot] = max(cap, 0)
                 self._slot_quota[slot] = 1 + self._slot_pf_budget[slot]
                 self._slot_replay[slot] = 0
+                if self.tracer.enabled:
+                    self.tracer.begin_attempt(
+                        req.uid, now, site=self.trace_site,
+                        fleet=self._slot_fleet.get(slot, ""), slot=slot)
+                    self.tracer.event(req.uid, TraceEvent.SEAT, now,
+                                      slot=slot)
 
     def _advance_prefills(self, now: float):
         """Advance every mid-prefill lane by one chunk (<= prefill_chunk
@@ -892,12 +1018,19 @@ class BatchedServer:
                 first = np.asarray(first)  # host sync only when lanes end
                 self.host_syncs += 1
             dead = []
+            tr = self.tracer
             for j, s in enumerate(slots):
                 req = self._active[s]
                 clen = int(clens[j])
                 self.prefill_tokens += clen
                 self._charge_unit(req, self._prefill_unit(req),
-                                  self.flops_per_token * clen)
+                                  self.flops_per_token * clen,
+                                  phase="prefill")
+                if tr.enabled:
+                    tr.event(req.uid, TraceEvent.PREFILL_CHUNK, now,
+                             tokens=clen, offset=int(offs[j]), slot=s)
+                    tr.count("bucket_hit", now,
+                             1.0 if cb == clen else 0.0, self.trace_site)
                 if final_ids[j] == self.slots:
                     self._prefill_pos[s] = int(offs[j]) + clen
                     continue
@@ -911,6 +1044,9 @@ class BatchedServer:
                     req.output.append(int(first[j]))
                     if req.first_token_s is None:
                         req.first_token_s = now
+                    if tr.enabled:  # final chunk committed one token
+                        tr.event(req.uid, TraceEvent.DECODE_DISPATCH, now,
+                                 tokens=1, slot=s, first=True)
                 if budgets[j] == 0 or (not replay
                                        and int(first[j]) in self._stop_set):
                     self._finish(req)
@@ -934,7 +1070,9 @@ class BatchedServer:
         share at roughly chunk / (chunk + dispatch work).  High values mean
         prompt admission starved live decode streams — exactly the
         utilization cliff chunked prefill removes.  Clock-free and
-        deterministic."""
+        deterministic.  Scoped to the current run: ``run()`` resets the
+        input counters at entry (``reset_run_counters``); step-driven
+        callers accumulate since the last explicit reset."""
         tot = self._stall_prefill_tokens + self._contended_decode_tokens
         return self._stall_prefill_tokens / max(tot, 1)
 
@@ -949,6 +1087,29 @@ class BatchedServer:
         fleet just went out of service — slots it drains are skipped by the
         commit loop."""
         return toks_np, emitted_np
+
+    def _sample_metrics(self, now: float, n_seated: int,
+                        decode_lanes: int) -> None:
+        """One step's gauge samples into the tracer timelines (enabled
+        tracers only — ``step`` guards the call)."""
+        tr = self.tracer
+        site = self.trace_site
+        slots = max(self.slots, 1)
+        tr.count("occupancy", now, n_seated / slots, site)
+        tr.count("decode_occupancy", now, decode_lanes / slots, site)
+        tr.count("prefill_occupancy", now,
+                 len(self._prefill_pos) / slots, site)
+        queued = sum(len(q) for q in self._queues.values())
+        tr.count("queued", now, float(queued), site)
+        tr.count("backlog_tokens", now,
+                 float(sum(len(r.prompt) + r.max_new_tokens
+                           for q in self._queues.values() for r in q)),
+                 site)
+        tr.count("decode_stall_frac", now, self.decode_stall_frac, site)
+        for name, ids in self._fleets.items():
+            seated = sum(1 for s in ids if self._active[s] is not None)
+            tr.count(f"fleet_util.{name or 'default'}", now,
+                     seated / max(len(ids), 1), site)
 
     # ------------------------------------------------------------ decoding
     def step(self, max_tokens: Optional[int] = None) -> int:
@@ -977,6 +1138,8 @@ class BatchedServer:
         n_seated = sum(1 for r in self._active if r is not None)
         active_slots = [s for s, r in enumerate(self._active)
                         if r is not None and s not in self._prefill_pos]
+        if self.tracer.enabled:
+            self._sample_metrics(now, n_seated, len(active_slots))
         if not active_slots:
             return n_seated
         n = 1 if max_tokens is None else max(1, int(max_tokens))
@@ -998,12 +1161,16 @@ class BatchedServer:
             time.perf_counter() - t_dispatch)
         released = []
         decode_emitted = 0
+        tr = self.tracer
         for slot in active_slots:
             req = self._active[slot]
             if req is None:  # drained by the resilience filter mid-dispatch
                 continue
             count = int(emitted_np[:, slot].sum())
             decode_emitted += count
+            if tr.enabled and count:
+                tr.event(req.uid, TraceEvent.DECODE_DISPATCH, now,
+                         tokens=count, slot=slot)
             for t in range(n):
                 if emitted_np[t, slot]:
                     if self._slot_replay[slot]:
@@ -1043,7 +1210,10 @@ class BatchedServer:
             dispatch_tokens: Optional[int] = None) -> List[Request]:
         """Serve until queues and slots drain (or ``max_steps`` dispatches);
         returns the requests finished (including expired) since the last
-        ``run`` call."""
+        ``run`` call.  Per-run counters (the ``decode_stall_frac`` inputs
+        and the ``run_report()`` baselines) are reset at entry so
+        back-to-back runs don't leak scheduler state into each other."""
+        self.reset_run_counters()
         n = self.dispatch_tokens if dispatch_tokens is None \
             else dispatch_tokens
         for _ in range(max_steps):

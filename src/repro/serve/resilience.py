@@ -60,6 +60,7 @@ import numpy as np
 from repro.core.chip import UnitHealth
 from repro.faults import FaultInjector, FaultKind
 from repro.serve.engine import BatchedServer, Request, RequestRejected
+from repro.telemetry.tracer import Event as TraceEvent
 
 
 # ---------------------------------------------------------------------------
@@ -253,6 +254,15 @@ class ResilientServer(BatchedServer):
         if self.chip_policy is not None:
             req.routed_unit = fleet
         self._queues[fleet].append(req)
+        if self.tracer.enabled:
+            self.tracer.request_begin(
+                req.uid, req.submitted_s,
+                prompt_tokens=int(np.asarray(req.prompt).size),
+                max_new_tokens=req.max_new_tokens,
+                precision=req.precision, accuracy_slo=req.accuracy_slo,
+                deadline_s=req.deadline_s)
+            self.tracer.event(req.uid, TraceEvent.ADMIT, self._clock(),
+                              site=self.trace_site, fleet=fleet)
 
     def _degraded(self) -> bool:
         """Any provisioned fleet out of service / cooling down / throttled?"""
@@ -268,6 +278,10 @@ class ResilientServer(BatchedServer):
         rec = dict(unit=unit, kind=kind, detected_s=now, recovered_s=None,
                    requests_drained=len(pending))
         self.fault_log.append(rec)
+        if self.tracer.enabled:
+            self.tracer.system_event(TraceEvent.FAULT, now,
+                                     site=self.trace_site, unit=unit,
+                                     kind=kind, drained=len(pending))
         if pending:
             self._recovering.append((rec, list(pending)))
         else:
@@ -322,6 +336,11 @@ class ResilientServer(BatchedServer):
                 req.requeues += 1
                 self._queues[v.unit].insert(0, req)
             self._release_slots(released)
+            if self.tracer.enabled:
+                for req in pending:  # after release: events land on the root
+                    self.tracer.event(req.uid, TraceEvent.REQUEUE, now,
+                                      site=self.trace_site, fleet=v.unit,
+                                      requeues=req.requeues, retry=True)
             self._log_fault(v.unit, FaultKind.CORRUPT, now, pending)
 
     def _probe_downed(self, now: float) -> None:
@@ -338,6 +357,10 @@ class ResilientServer(BatchedServer):
                 self._corrupt_streak.pop(name, None)
                 self.chip_policy.clear_health(name)
                 self.set_fleet_in_service(name, True)
+                if self.tracer.enabled:
+                    self.tracer.system_event(TraceEvent.PROBE, now,
+                                             site=self.trace_site,
+                                             unit=name)
 
     # ------------------------------------------------------ load shedding
     def _shed_unmeetable(self, now: float) -> None:
@@ -375,6 +398,11 @@ class ResilientServer(BatchedServer):
                         f"{req.deadline_s:.3f}s on fleet {fleet!r}")
                     self.rejected.append(req)
                     self.shed_requests.append(req)
+                    if self.tracer.enabled:
+                        self.tracer.event(req.uid, TraceEvent.SHED, now,
+                                          site=self.trace_site,
+                                          fleet=fleet)
+                        self.tracer.end_request(req.uid, now, "rejected")
                 else:
                     keep.append(req)
             queue[:] = keep
